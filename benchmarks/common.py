@@ -1,0 +1,81 @@
+"""Shared benchmark harness: sketch construction, metric computation
+(paper Eq. 17), timing, and CSV emission.
+
+CPU-scale note (DESIGN.md §8.4): datasets are scaled-down twins of the
+paper's (Lkml / WT / SO are 1M-63M edges; we default to 100-300k so the
+full suite runs in CI).  Accuracy and space numbers are implementation-
+independent; wall-clock numbers are CPU and meaningful as *relative*
+comparisons, so each timing row also reports the structural counter
+(buckets probed) which is hardware-independent.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.baselines import AuxoTime, Horae, PGSS
+from repro.core.higgs import HiggsSketch
+from repro.core.oracle import ExactOracle
+from repro.core.params import HiggsParams
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def aae_are(est: np.ndarray, true: np.ndarray):
+    err = np.abs(est - true)
+    aae = float(err.mean())
+    nz = true > 0
+    are = float((err[nz] / true[nz]).mean()) if nz.any() else 0.0
+    return aae, are
+
+
+def build_all(stream, l_bits: int, include=("HIGGS", "Horae", "Horae-cpt",
+                                            "PGSS", "AuxoTime",
+                                            "AuxoTime-cpt"),
+              higgs_params: HiggsParams | None = None):
+    """Returns dict name -> (sketch, insert_seconds)."""
+    out = {}
+    factories = {
+        "HIGGS": lambda: HiggsSketch(higgs_params or
+                                     HiggsParams(d1=16, F1=19)),
+        "Horae": lambda: Horae(l_bits=l_bits, d=96, b=4),
+        "Horae-cpt": lambda: Horae(l_bits=l_bits, d=96, b=4, cpt=True),
+        "PGSS": lambda: PGSS(l_bits=l_bits, m=1 << 17),
+        "AuxoTime": lambda: AuxoTime(l_bits=l_bits, d=48, b=4),
+        "AuxoTime-cpt": lambda: AuxoTime(l_bits=l_bits, d=48, b=4,
+                                         cpt=True),
+    }
+    for name in include:
+        sk = factories[name]()
+        t0 = time.perf_counter()
+        sk.insert(*stream)
+        sk.flush()
+        out[name] = (sk, time.perf_counter() - t0)
+    return out
+
+
+def build_oracle(stream) -> ExactOracle:
+    ora = ExactOracle()
+    ora.insert(*stream)
+    return ora
+
+
+def rand_ranges(rng, t_max: int, lq: int, n: int):
+    starts = rng.integers(0, max(t_max - lq, 1), n)
+    return [(int(s), int(s + lq - 1)) for s in starts]
+
+
+def time_queries(fn, repeat: int = 3):
+    """Returns (result of last call, microseconds per call)."""
+    fn()                                   # warmup / jit
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        res = fn()
+    return res, (time.perf_counter() - t0) / repeat * 1e6

@@ -1,0 +1,110 @@
+"""Generate EXPERIMENTS.md §Dry-run + §Roofline tables from
+experiments/dryrun/*.json (run after repro.launch.sweep)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import roofline as rl
+
+ARCH_ORDER = ["pixtral-12b", "qwen1.5-32b", "minitron-8b", "llama3-8b",
+              "gemma3-4b", "mixtral-8x7b", "qwen3-moe-30b-a3b",
+              "recurrentgemma-9b", "musicgen-large", "falcon-mamba-7b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def _key(r):
+    return (ARCH_ORDER.index(r["arch"]), SHAPE_ORDER.index(r["shape"]))
+
+
+def dryrun_section(out_dir="experiments/dryrun") -> str:
+    lines = ["## §Dry-run", "",
+             "Every (arch × shape) cell lowered **and compiled** on the "
+             "single-pod 16×16 (256 chips) and multi-pod 2×16×16 (512 "
+             "chips) meshes (`repro.launch.sweep`).  Bytes are per-device "
+             "from `compiled.memory_analysis()`; `skip` = long_500k on "
+             "pure full-attention archs (DESIGN.md §5).", "",
+             "| arch | shape | mesh | status | args GB | temp GB | mb | "
+             "collective bytes/dev |",
+             "|---|---|---|---|---|---|---|---|"]
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as fh:
+            recs.append(json.load(fh))
+    recs.sort(key=lambda r: (_key(r), r["mesh"]))
+    for r in recs:
+        if r.get("status") == "skipped_na":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"skip (full attn @500k) | – | – | – | – |")
+            continue
+        mem = r.get("memory", {})
+        coll = sum(r.get("collectives", {}).values())
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['status']} "
+            f"| {mem.get('argument_size_in_bytes', 0) / 1e9:.2f} "
+            f"| {mem.get('temp_size_in_bytes', 0) / 1e9:.2f} "
+            f"| {r.get('microbatches', 1)} | {coll / 1e9:.2f}e9 |")
+    return "\n".join(lines)
+
+
+def roofline_section(out_dir="experiments/dryrun") -> str:
+    lines = ["## §Roofline", "",
+             "Three-term roofline per (arch × shape), single-pod mesh, "
+             "per-chip HLO terms.  Hardware: 197 TFLOP/s bf16, 819 GB/s "
+             "HBM, 4×50 GB/s ICI.  `useful` = MODEL_FLOPS (6·N·D / "
+             "2·N·D analytic, MoE active-params) ÷ HLO FLOPs — values "
+             "< 1 measure remat/redundant compute; `frac` = analytic "
+             "compute-roofline time ÷ dominant term (the roofline "
+             "fraction this cell achieves under the structural model).",
+             "",
+             "Notes on the byte model: operand+output bytes per top-level "
+             "HLO op, while-bodies scaled by trip count, DUS/slice "
+             "aliasing respected.  It is an *upper bound* on HBM traffic "
+             "(each buffer counted at producer and every consumer; "
+             "fusion-internal elision beyond op boundaries not modeled), "
+             "so memory terms skew pessimistic — before/after deltas in "
+             "§Perf use the same model and are directly comparable.", "",
+             "| arch | shape | compute s | memory s | collective s | "
+             "dominant | useful | frac | what would move the dominant "
+             "term |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    fixes = {
+        ("train", "memory"): "bf16 norm/residual chains (H1), flash "
+        "remat (H5), larger microbatches",
+        ("train", "collective"): "fewer/larger microbatches (fewer FSDP "
+        "gathers), bf16 grad reduction (H2)",
+        ("train", "compute"): "remat policy saving dot outputs",
+        ("prefill", "memory"): "bf16 score chains; fused flash kernel",
+        ("decode", "memory"): "KV cache is the floor — quantize KV or "
+        "shrink dtype",
+        ("decode", "collective"): "head-sharded cache when divisible",
+    }
+    recs = [r for r in rl.load_records(out_dir, mesh="pod")]
+    recs.sort(key=_key)
+    for r in recs:
+        s = rl.summarize(r)
+        if s is None:
+            continue
+        if s.get("skip"):
+            lines.append(f"| {s['arch']} | {s['shape']} | – | – | – | "
+                         f"skip | – | – | – |")
+            continue
+        fix = fixes.get((r.get("kind", "train"), s["dominant"]),
+                        "see §Perf")
+        lines.append(
+            f"| {s['arch']} | {s['shape']} | {s['compute_s']:.3f} | "
+            f"{s['memory_s']:.3f} | {s['collective_s']:.3f} | "
+            f"**{s['dominant']}** | {s['useful_ratio']:.2f} | "
+            f"{s['roofline_frac']:.3f} | {fix} |")
+    return "\n".join(lines)
+
+
+def main():
+    print(dryrun_section())
+    print()
+    print(roofline_section())
+
+
+if __name__ == "__main__":
+    main()

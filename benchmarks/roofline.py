@@ -1,0 +1,82 @@
+"""Roofline table (deliverable g): reads experiments/dryrun/*.json and
+prints, per (arch x shape), the three roofline terms, the dominant
+bottleneck, and the MODEL_FLOPS / HLO_FLOPs usefulness ratio.
+
+Hardware model (TPU v5e-like): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI x 4 links.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9 * 4
+
+
+def load_records(out_dir: str = "experiments/dryrun", mesh: str = "pod"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, f"*_{mesh}.json"))):
+        with open(path) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def summarize(rec: dict) -> dict | None:
+    if rec.get("status") == "skipped_na":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "skip": True}
+    if rec.get("status") != "compiled":
+        return None
+    n_dev = rec["n_devices"]
+    flops = rec["hlo_flops"]
+    nbytes = rec["hlo_bytes_accessed"]
+    coll = sum(rec.get("collectives", {}).values())
+    terms = {"compute_s": flops / PEAK, "memory_s": nbytes / HBM,
+             "collective_s": coll / ICI}
+    dom = max(terms, key=terms.get)
+    total = max(terms.values())
+    model_flops_dev = rec["analytic_flops"] / n_dev
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "skip": False,
+        **terms, "dominant": dom.replace("_s", ""),
+        "useful_ratio": model_flops_dev / max(flops, 1),
+        "roofline_frac": (model_flops_dev / PEAK) / max(total, 1e-12),
+        "mem_bytes_per_dev": rec.get("memory", {}).get(
+            "temp_size_in_bytes", 0) +
+        rec.get("memory", {}).get("argument_size_in_bytes", 0),
+        "microbatches": rec.get("microbatches", 1),
+    }
+
+
+def run(out_dir: str = "experiments/dryrun"):
+    recs = load_records(out_dir)
+    if not recs:
+        common.emit("roofline/NO_DRYRUN_RECORDS", 0.0,
+                    "run repro.launch.sweep first")
+        return
+    for rec in recs:
+        s = summarize(rec)
+        if s is None:
+            common.emit(f"roofline/{rec['arch']}/{rec['shape']}", 0.0,
+                        "FAILED")
+            continue
+        if s["skip"]:
+            common.emit(f"roofline/{s['arch']}/{s['shape']}", 0.0,
+                        "skipped_na(long-context full attention)")
+            continue
+        common.emit(
+            f"roofline/{s['arch']}/{s['shape']}", 0.0,
+            f"compute_s={s['compute_s']:.4g};memory_s={s['memory_s']:.4g};"
+            f"collective_s={s['collective_s']:.4g};dom={s['dominant']};"
+            f"useful={s['useful_ratio']:.2f};"
+            f"roofline_frac={s['roofline_frac']:.3f};"
+            f"hbm_GB={s['mem_bytes_per_dev'] / 1e9:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Paper Fig. 19: space overhead across datasets (paper bit-layout
+accounting for HIGGS; array footprint for baselines)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.stream.generator import (lkml_like_stream, power_law_stream,
+                                    wiki_talk_like_stream)
+
+
+def run(seed: int = 0):
+    datasets = {
+        "lkml": lkml_like_stream(n_edges=100_000, seed=seed),
+        "wiki-talk": wiki_talk_like_stream(n_edges=120_000, seed=seed),
+        "powerlaw": power_law_stream(n_edges=100_000, seed=seed),
+    }
+    for ds_name, stream in datasets.items():
+        t_max = int(stream[3][-1])
+        l_bits = max(int(np.ceil(np.log2(t_max + 1))), 1)
+        sketches = common.build_all(stream, l_bits)
+        base = None
+        for name, (sk, _) in sketches.items():
+            mb = sk.space_bytes() / 1e6
+            if name == "HIGGS":
+                base = mb
+                extra = f"utilization={sk.utilization():.3f}"
+            else:
+                extra = f"vs_HIGGS={mb / base:.2f}x" if base else ""
+            common.emit(f"space/{ds_name}/{name}", 0.0,
+                        f"MB={mb:.2f};{extra}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Paper Fig. 16-18: insertion throughput, insertion latency, and
+deletion throughput (deletion = negative-weight insertion)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.stream.generator import lkml_like_stream
+
+
+def run(n_edges: int = 100_000, seed: int = 0):
+    stream = lkml_like_stream(n_edges=n_edges, seed=seed)
+    src, dst, w, t = stream
+    t_max = int(t[-1])
+    l_bits = max(int(np.ceil(np.log2(t_max + 1))), 1)
+
+    sketches = common.build_all(stream, l_bits)
+    for name, (sk, ins_s) in sketches.items():
+        eps = n_edges / ins_s
+        common.emit(f"throughput/insert/{name}", ins_s / n_edges * 1e6,
+                    f"edges_per_s={eps:.0f}")
+
+    # deletion: remove the first half of the stream
+    half = n_edges // 2
+    for name, (sk, _) in sketches.items():
+        t0 = time.perf_counter()
+        sk.insert(src[:half], dst[:half], -w[:half], t[:half])
+        sk.flush()
+        dt = time.perf_counter() - t0
+        common.emit(f"throughput/delete/{name}", dt / half * 1e6,
+                    f"edges_per_s={half / dt:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,21 @@
+"""Batched LM serving example (wave-scheduled continuous batching).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mixtral-8x7b]
+"""
+import argparse
+import sys
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    args, extra = ap.parse_known_args()
+    return serve_mod.main(["--arch", args.arch, "--reduced",
+                           "--requests", "8", "--batch", "4",
+                           "--prompt-len", "12", "--max-new", "12"] + extra)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

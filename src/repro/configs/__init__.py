@@ -1,0 +1,50 @@
+"""Architecture registry: exact assigned configs + reduced smoke twins.
+
+Usage: ``get_config("llama3-8b")`` / ``get_config("llama3-8b", reduced=True)``.
+Shapes: ``SHAPES[shape]`` gives (seq_len, global_batch, step kind).
+``long_500k`` applicability is per-arch (``supports_long(cfg)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCH_IDS = [
+    "pixtral-12b", "qwen1.5-32b", "minitron-8b", "llama3-8b", "gemma3-4b",
+    "mixtral-8x7b", "qwen3-moe-30b-a3b", "recurrentgemma-9b",
+    "musicgen-large", "falcon-mamba-7b",
+]
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def _module(arch: str):
+    return importlib.import_module(
+        "repro.configs." + arch.replace("-", "_").replace(".", "_"))
+
+
+def get_config(arch: str, reduced: bool = False):
+    mod = _module(arch)
+    return mod.smoke_config() if reduced else mod.full_config()
+
+
+def supports_long(arch: str) -> bool:
+    """long_500k runs only for bounded-state archs (DESIGN.md §5)."""
+    return getattr(_module(arch), "SUPPORTS_LONG_500K", False)
+
+
+def shape_applicable(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return supports_long(arch)
+    return True
+
+
+def all_cells():
+    """The 40 assigned (arch x shape) cells with applicability flags."""
+    return [(a, s, shape_applicable(a, s))
+            for a in ARCH_IDS for s in SHAPES]

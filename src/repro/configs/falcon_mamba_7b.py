@@ -1,0 +1,24 @@
+"""falcon-mamba-7b [ssm]: attention-free Mamba-1.  64L d_model=4096
+d_ff=0 vocab=65024, d_inner=8192, ssm_state=16.  [arXiv:2410.05355;
+unverified]
+
+long_500k RUNS: O(1) SSM state."""
+from repro.models.transformer import ModelConfig
+
+SUPPORTS_LONG_500K = True
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="falcon-mamba-7b", n_layers=64, d_model=4096, n_heads=1,
+        n_kv_heads=1, head_dim=64, d_ff=0, vocab=65024,
+        pattern=("mamba",), mamba_d_inner=8192, ssm_state=16,
+        tie_embeddings=False)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="falcon-mamba-7b-smoke", n_layers=4, d_model=64, n_heads=1,
+        n_kv_heads=1, head_dim=16, d_ff=0, vocab=512,
+        pattern=("mamba",), mamba_d_inner=128, ssm_state=8,
+        tie_embeddings=False, max_seq=128)

@@ -1,0 +1,26 @@
+"""gemma3-4b [dense]: 34L d_model=2560 8H (GQA kv=4) d_ff=10240
+vocab=262144, 5:1 local:global attention (window 1024), 128k context.
+[hf:google/gemma-3-1b-pt; unverified]
+
+long_500k RUNS: context state is dominated by the 5/6 local layers'
+bounded windows; the sparse global layers keep a sequence-sharded KV
+(DESIGN.md §5)."""
+from repro.models.transformer import ModelConfig
+
+SUPPORTS_LONG_500K = True
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-4b", n_layers=34, d_model=2560, n_heads=8,
+        n_kv_heads=4, head_dim=256, d_ff=10240, vocab=262144,
+        pattern=("local",) * 5 + ("attn",), local_window=1024,
+        rope_theta=1e6, tie_embeddings=True)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma3-4b-smoke", n_layers=7, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=128, vocab=512,
+        pattern=("local",) * 5 + ("attn",), local_window=16,
+        tie_embeddings=True, max_seq=128)

@@ -1,0 +1,19 @@
+"""llama3-8b [dense]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=128256.  [arXiv:2407.21783; unverified]"""
+from repro.models.transformer import ModelConfig
+
+SUPPORTS_LONG_500K = False
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-8b", n_layers=32, d_model=4096, n_heads=32,
+        n_kv_heads=8, head_dim=128, d_ff=14336, vocab=128256,
+        pattern=("attn",), rope_theta=5e5, tie_embeddings=False)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-8b-smoke", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=1, head_dim=16, d_ff=128, vocab=512,
+        pattern=("attn",), tie_embeddings=False, max_seq=128)

@@ -1,0 +1,19 @@
+"""minitron-8b [dense]: pruned Nemotron.  32L d_model=4096 32H (GQA kv=8)
+d_ff=16384 vocab=256000.  [arXiv:2407.14679; hf]"""
+from repro.models.transformer import ModelConfig
+
+SUPPORTS_LONG_500K = False
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-8b", n_layers=32, d_model=4096, n_heads=32,
+        n_kv_heads=8, head_dim=128, d_ff=16384, vocab=256000,
+        pattern=("attn",), tie_embeddings=False)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="minitron-8b-smoke", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=1, head_dim=16, d_ff=192, vocab=512,
+        pattern=("attn",), tie_embeddings=False, max_seq=128)

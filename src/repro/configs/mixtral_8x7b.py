@@ -1,0 +1,26 @@
+"""mixtral-8x7b [moe]: 32L d_model=4096 32H (GQA kv=8) expert d_ff=14336
+vocab=32000, 8 experts top-2, SWA window 4096.  [arXiv:2401.04088; hf]
+
+long_500k RUNS: the sliding window bounds the KV cache at 4096 per layer
+(rolling cache).  MoE mode: TP over d_ff (8 experts do not tile the
+16-way model axis — DESIGN.md §6)."""
+from repro.models.transformer import ModelConfig
+
+SUPPORTS_LONG_500K = True
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x7b", n_layers=32, d_model=4096, n_heads=32,
+        n_kv_heads=8, head_dim=128, d_ff=14336, vocab=32000,
+        pattern=("swa",), local_window=4096, rope_theta=1e6,
+        moe=True, n_experts=8, moe_top_k=2, tie_embeddings=False)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x7b-smoke", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=96, vocab=512,
+        pattern=("swa",), local_window=16,
+        moe=True, n_experts=4, moe_top_k=2, tie_embeddings=False,
+        max_seq=128)

@@ -1,0 +1,24 @@
+"""musicgen-large [audio]: decoder-only over EnCodec tokens.  48L
+d_model=2048 32H (MHA kv=32) d_ff=8192 vocab=2048.
+[arXiv:2306.05284; hf]
+
+The EnCodec/conditioning frontend is a STUB: ``input_specs`` provides
+precomputed conditioning frame embeddings as a 64-position prefix."""
+from repro.models.transformer import ModelConfig
+
+SUPPORTS_LONG_500K = False
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large", n_layers=48, d_model=2048, n_heads=32,
+        n_kv_heads=32, head_dim=64, d_ff=8192, vocab=2048,
+        pattern=("attn",), tie_embeddings=False, prefix_len=64)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="musicgen-large-smoke", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=4, head_dim=16, d_ff=128, vocab=256,
+        pattern=("attn",), tie_embeddings=False, prefix_len=8,
+        max_seq=128)

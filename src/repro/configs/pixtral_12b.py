@@ -1,0 +1,26 @@
+"""pixtral-12b [vlm]: Pixtral-ViT frontend (STUB) + Mistral-Nemo-style
+decoder.  40L d_model=5120 32H (GQA kv=8) d_ff=14336 vocab=131072.
+[hf:mistralai/Pixtral-12B-2409; unverified]
+
+The vision frontend is a stub per the assignment: ``input_specs`` supplies
+precomputed patch embeddings (prefix_len positions) ahead of the text
+tokens."""
+from repro.models.transformer import ModelConfig
+
+SUPPORTS_LONG_500K = False          # pure full attention
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="pixtral-12b", n_layers=40, d_model=5120, n_heads=32,
+        n_kv_heads=8, head_dim=128, d_ff=14336, vocab=131072,
+        pattern=("attn",), rope_theta=1e6, tie_embeddings=False,
+        prefix_len=256)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="pixtral-12b-smoke", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=1, head_dim=16, d_ff=128, vocab=512,
+        pattern=("attn",), tie_embeddings=False, prefix_len=8,
+        max_seq=128)

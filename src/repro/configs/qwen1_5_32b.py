@@ -1,0 +1,20 @@
+"""qwen1.5-32b [dense]: 64L d_model=5120 40H (GQA kv=40, i.e. MHA)
+d_ff=27392 vocab=152064, QKV bias.  [hf:Qwen/Qwen1.5-0.5B; hf]"""
+from repro.models.transformer import ModelConfig
+
+SUPPORTS_LONG_500K = False
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-32b", n_layers=64, d_model=5120, n_heads=40,
+        n_kv_heads=40, head_dim=128, d_ff=27392, vocab=152064,
+        pattern=("attn",), qkv_bias=True, tie_embeddings=False)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-32b-smoke", n_layers=4, d_model=64, n_heads=4,
+        n_kv_heads=4, head_dim=16, d_ff=160, vocab=512,
+        pattern=("attn",), qkv_bias=True, tie_embeddings=False,
+        max_seq=128)

@@ -1,0 +1,26 @@
+"""qwen3-moe-30b-a3b [moe]: 48L d_model=2048 32H (GQA kv=4) expert
+d_ff=768 vocab=151936, 128 experts top-8.  [hf:Qwen/Qwen3-30B-A3B; hf]
+
+MoE mode: EP — 128 experts shard the 16-way model axis (8 experts per
+shard); dispatch is local filtering, combine is the TP psum
+(DESIGN.md §6)."""
+from repro.models.transformer import ModelConfig
+
+SUPPORTS_LONG_500K = False
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-30b-a3b", n_layers=48, d_model=2048, n_heads=32,
+        n_kv_heads=4, head_dim=128, d_ff=768, vocab=151936,
+        pattern=("attn",), rope_theta=1e6,
+        moe=True, n_experts=128, moe_top_k=8, tie_embeddings=False)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-smoke", n_layers=3, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=48, vocab=512,
+        pattern=("attn",),
+        moe=True, n_experts=16, moe_top_k=4, tie_embeddings=False,
+        max_seq=128)

@@ -1,0 +1,24 @@
+"""recurrentgemma-9b [hybrid]: 38L d_model=4096 16H (MQA kv=1) d_ff=12288
+vocab=256000, RG-LRU + local attention 1:2 (pattern rglru,rglru,attn,
+window 2048).  [arXiv:2402.19427; unverified]
+
+long_500k RUNS: O(1) RG-LRU state + 2048-window local attention."""
+from repro.models.transformer import ModelConfig
+
+SUPPORTS_LONG_500K = True
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b", n_layers=38, d_model=4096, n_heads=16,
+        n_kv_heads=1, head_dim=256, d_ff=12288, vocab=256000,
+        pattern=("rglru", "rglru", "local"), local_window=2048,
+        lru_width=4096, tie_embeddings=True)
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b-smoke", n_layers=6, d_model=64, n_heads=4,
+        n_kv_heads=1, head_dim=16, d_ff=128, vocab=512,
+        pattern=("rglru", "rglru", "local"), local_window=16,
+        lru_width=64, tie_embeddings=True, max_seq=128)

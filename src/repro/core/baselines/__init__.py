@@ -1,0 +1,14 @@
+"""Baseline graph-stream summaries the paper compares against (Sec. VI-A):
+TCM, GSS-style fingerprint matrices, Horae (+cpt), PGSS, AuxoTime (+cpt).
+
+These are host-side (numpy) reference implementations with the same batch
+API as :class:`repro.core.higgs.HiggsSketch`; the benchmark harness reports
+both wall time and hardware-independent structural counters (buckets
+probed / entries scanned) — see DESIGN.md §8 note 4.
+"""
+from repro.core.baselines.tcm import TCM
+from repro.core.baselines.horae import Horae
+from repro.core.baselines.pgss import PGSS
+from repro.core.baselines.auxotime import AuxoTime
+
+__all__ = ["TCM", "Horae", "PGSS", "AuxoTime"]

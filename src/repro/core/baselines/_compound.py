@@ -1,0 +1,15 @@
+"""Shared path/subgraph query composition for baseline sketches
+(paper Sec. III: compound queries decompose into edge queries)."""
+import numpy as np
+
+
+class CompoundQueryMixin:
+    def path_query(self, path_vertices, ts: int, te: int) -> float:
+        srcs = np.asarray(path_vertices[:-1], np.uint32)
+        dsts = np.asarray(path_vertices[1:], np.uint32)
+        return float(np.sum(self.edge_query(srcs, dsts, ts, te)))
+
+    def subgraph_query(self, edges, ts: int, te: int) -> float:
+        srcs = np.asarray([e[0] for e in edges], np.uint32)
+        dsts = np.asarray([e[1] for e in edges], np.uint32)
+        return float(np.sum(self.edge_query(srcs, dsts, ts, te)))

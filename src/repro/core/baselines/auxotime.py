@@ -1,0 +1,193 @@
+"""AuxoTime: the paper's constructed baseline — Auxo's prefix-embedded
+tree (Jiang et al., VLDB'23) extended with Horae's dyadic temporal
+decomposition (paper Sec. VI-A).
+
+Per temporal layer, edges are routed to one of 2^k matrices by the leading
+k bits of the edge fingerprint (the PET); when global load exceeds a
+threshold the layer doubles its matrix count (Auxo's proportional
+incremental strategy) and entries are re-distributed by their next prefix
+bit.  Queries visit exactly one matrix per dyadic block, so scalability is
+better than Horae while accuracy stays fingerprint-bound (similar AAE, as
+in the paper's Figs. 10-13).  ``cpt`` halves the layer count like
+Horae-cpt.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import hashing
+from repro.core.baselines._compound import CompoundQueryMixin
+from repro.core.baselines.horae import _FpLayer, _EMPTY
+
+
+class _PetLayer:
+    """A prefix-embedded tree of fingerprint matrices for one granularity."""
+
+    def __init__(self, d: int, b: int, seed: int, F: int = 24,
+                 max_split: int = 6):
+        self.d, self.b, self.seed, self.F = d, b, seed, F
+        self.k = 0                                   # 2^k matrices
+        self.max_split = max_split
+        self.mats = [_FpLayer(d, b, seed)]
+        self.inserted = 0
+
+    def _route(self, fp: np.ndarray) -> np.ndarray:
+        # route by the top k bits of the source-side fingerprint field,
+        # which occupies bits [32, 32 + F/2) of the combined key
+        if not self.k:
+            return np.zeros(len(fp), np.int64)
+        shift = np.uint64(32 + self.F // 2 - self.k)
+        return ((fp >> shift) & np.uint64((1 << self.k) - 1)).astype(np.int64)
+
+    def insert(self, hs, hd, fp, w) -> None:
+        self.inserted += len(fp)
+        if self.inserted > 0.7 * (1 << self.k) * self.d * self.d * self.b \
+                and self.k < self.max_split:
+            self._split()
+        route = self._route(fp)
+        for m in np.unique(route):
+            sel = route == m
+            self.mats[m].insert(hs[sel], hd[sel], fp[sel], w[sel])
+
+    def _split(self) -> None:
+        """Double the matrix count; redistribute by the next prefix bit."""
+        self.k += 1
+        new = [_FpLayer(self.d, self.b, self.seed) for _ in
+               range(1 << self.k)]
+        for old in self.mats:
+            occ = old.key != _EMPTY
+            if occ.any():
+                keys = old.key[occ]
+                ws = old.w[occ]
+                rows, cols, _ = np.nonzero(occ)
+                route = self._route(keys)
+                for m in np.unique(route):
+                    sel = route == m
+                    tgt = new[m]
+                    for r, c, f, wi in zip(rows[sel], cols[sel], keys[sel],
+                                           ws[sel]):
+                        slots = tgt.key[r, c]
+                        free = np.nonzero(slots == _EMPTY)[0]
+                        if free.size:
+                            tgt.key[r, c, free[0]] = f
+                            tgt.w[r, c, free[0]] = wi
+                        else:
+                            kk = int(f) * self.d * self.d + int(r) * \
+                                self.d + int(c)
+                            tgt.spill[kk] = tgt.spill.get(kk, 0.0) + wi
+            for kk, wi in old.spill.items():
+                f = np.uint64(kk // (self.d * self.d))
+                m = int(self._route(np.asarray([f], np.uint64))[0])
+                tgt = new[m]
+                tgt.spill[kk] = tgt.spill.get(kk, 0.0) + wi
+        self.mats = new
+
+    def query_edge(self, hs, hd, fp):
+        route = self._route(fp)
+        out = np.zeros(len(fp), np.float64)
+        for m in np.unique(route):
+            sel = route == m
+            out[sel] = self.mats[m].query_edge(hs[sel], hd[sel], fp[sel])
+        return out
+
+    def query_vertex(self, hv, fv, direction):
+        # vertex queries must scan every PET matrix (prefix routes by the
+        # full edge fingerprint) — Auxo's known vertex-query cost
+        out = np.zeros(len(hv), np.float64)
+        for m in self.mats:
+            out += m.query_vertex(hv, fv, direction)
+        return out
+
+    def entries(self) -> int:
+        return sum(m.key.size for m in self.mats)
+
+    def spills(self) -> int:
+        return sum(len(m.spill) for m in self.mats)
+
+
+class AuxoTime(CompoundQueryMixin):
+    name = "AuxoTime"
+    temporal = True
+
+    def __init__(self, l_bits: int = 20, d: int = 48, b: int = 4,
+                 F: int = 24, seed: int = 31, cpt: bool = False):
+        self.l_bits, self.F, self.cpt = l_bits, F, cpt
+        self.step = 2 if cpt else 1
+        self.levels = list(range(0, l_bits + 1, self.step))
+        self.layers = {l: _PetLayer(d, b, seed + l, F=F)
+                       for l in self.levels}
+        self.seed = seed
+        self.probe_counter = 0
+        if cpt:
+            self.name = "AuxoTime-cpt"
+
+    def _components(self, vid, level, prefix, side: str):
+        seed = self.seed if side == "s" else self.seed ^ 0x5BD1E995
+        h = hashing.np_mix32(np.asarray(vid, np.uint32), seed)
+        pfx = hashing.np_mix32(
+            np.asarray(prefix, np.uint64).astype(np.uint32) ^
+            np.uint32((level * 0x85EBCA6B) & 0xFFFFFFFF),
+            seed ^ 0xC2B2AE35)
+        hv = h ^ pfx
+        fv = hv & np.uint32((1 << (self.F // 2)) - 1)
+        return (hv >> np.uint32(self.F // 2)), fv
+
+    def insert(self, src, dst, w, t) -> None:
+        src = np.asarray(src, np.uint32)
+        dst = np.asarray(dst, np.uint32)
+        w = np.asarray(w, np.float64)
+        t = np.asarray(t, np.uint64)
+        for l in self.levels:
+            prefix = t >> np.uint64(l)
+            hs, fs = self._components(src, l, prefix, "s")
+            hd, fd = self._components(dst, l, prefix, "d")
+            fp = (fs.astype(np.uint64) << np.uint64(32)) | fd
+            self.layers[l].insert(hs, hd, fp, w)
+
+    def flush(self) -> None:
+        pass
+
+    def _decompose(self, ts: int, te: int):
+        out = []
+        lo, hi = int(ts), int(te) + 1
+        while lo < hi:
+            l = min((lo & -lo).bit_length() - 1 if lo else self.l_bits,
+                    (hi - lo).bit_length() - 1, self.l_bits)
+            while l % self.step:
+                l -= 1
+            out.append((l, lo >> l))
+            lo += 1 << l
+        return out
+
+    def edge_query(self, src, dst, ts: int, te: int):
+        src = np.atleast_1d(np.asarray(src, np.uint32))
+        dst = np.atleast_1d(np.asarray(dst, np.uint32))
+        out = np.zeros(len(src), np.float64)
+        for level, prefix in self._decompose(ts, te):
+            pfx = np.full(len(src), prefix, np.uint64)
+            hs, fs = self._components(src, level, pfx, "s")
+            hd, fd = self._components(dst, level, pfx, "d")
+            fp = (fs.astype(np.uint64) << np.uint64(32)) | fd
+            out += self.layers[level].query_edge(hs, hd, fp)
+            self.probe_counter += len(src)
+        return out
+
+    def vertex_query(self, v, ts: int, te: int, direction: str = "out"):
+        v = np.atleast_1d(np.asarray(v, np.uint32))
+        out = np.zeros(len(v), np.float64)
+        side = "s" if direction == "out" else "d"
+        for level, prefix in self._decompose(ts, te):
+            pfx = np.full(len(v), prefix, np.uint64)
+            hv, fv = self._components(v, level, pfx, side)
+            lay = self.layers[level]
+            out += lay.query_vertex(hv, fv, direction)
+            self.probe_counter += len(v) * lay.d * len(lay.mats)
+        return out
+
+    def space_bytes(self) -> float:
+        per_entry = (self.F + 32) / 8.0
+        total = 0.0
+        for layer in self.layers.values():
+            total += layer.entries() * per_entry
+            total += layer.spills() * (per_entry + 8)
+        return total

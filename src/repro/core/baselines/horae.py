@@ -1,0 +1,195 @@
+"""Horae (Chen et al., ICDE'22): top-down, domain-based multi-layer TRQ
+summarization.
+
+Layer l has temporal granularity 2^l.  Every stream item is inserted into
+EVERY layer, keyed by the vertex ids combined with the item's time prefix
+(t >> l) — so each layer's matrix summarizes the entire stream at its
+granularity ("global hashing conflicts", paper Sec. I).  A temporal range
+query is decomposed into O(log L) dyadic sub-ranges; each sub-range is an
+edge/vertex query on its layer; results are summed.
+
+Each layer is a GSS-style fingerprint matrix (d x d buckets, b slots,
+F-bit fingerprints) with a host-side spill list standing in for GSS's
+adjacency buffer.  ``cpt`` keeps only every second layer (the compact
+variant trades more sub-range queries for less space, matching the
+paper's observed accuracy/latency degradation and space savings).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import hashing
+from repro.core.baselines._compound import CompoundQueryMixin
+
+_EMPTY = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+class _FpLayer:
+    """One GSS-style fingerprint matrix keyed by 64-bit combined keys."""
+
+    def __init__(self, d: int, b: int, seed: int):
+        self.d, self.b, self.seed = d, b, seed
+        self.key = np.full((d, d, b), _EMPTY, np.uint64)
+        self.w = np.zeros((d, d, b), np.float64)
+        self.spill: dict[int, float] = {}
+
+    def _locate(self, hs: np.ndarray, hd: np.ndarray, fp: np.ndarray):
+        return (hs % self.d).astype(np.int64), (hd % self.d).astype(np.int64)
+
+    def insert(self, hs, hd, fp, w) -> None:
+        rows, cols = self._locate(hs, hd, fp)
+        # sequential host loop per layer — GSS semantics (first match or
+        # first empty slot, else spill list)
+        key, wm, b = self.key, self.w, self.b
+        for r, c, f, wi in zip(rows, cols, np.asarray(fp, np.uint64),
+                               np.asarray(w, np.float64)):
+            slots = key[r, c]
+            hit = np.nonzero(slots == f)[0]
+            if hit.size:
+                wm[r, c, hit[0]] += wi
+                continue
+            free = np.nonzero(slots == _EMPTY)[0]
+            if free.size:
+                key[r, c, free[0]] = f
+                wm[r, c, free[0]] = wi
+            else:
+                k = int(f) * self.d * self.d + int(r) * self.d + int(c)
+                self.spill[k] = self.spill.get(k, 0.0) + wi
+
+    def query_edge(self, hs, hd, fp):
+        rows, cols = self._locate(hs, hd, fp)
+        slots = self.key[rows, cols]                       # (q, b)
+        hitw = np.where(slots == np.asarray(fp, np.uint64)[:, None],
+                        self.w[rows, cols], 0.0).sum(axis=1)
+        for i, (r, c, f) in enumerate(zip(rows, cols, fp)):
+            k = int(f) * self.d * self.d + int(r) * self.d + int(c)
+            if k in self.spill:
+                hitw[i] += self.spill[k]
+        return hitw
+
+    def query_vertex(self, hv, fpv, direction: str):
+        """fpv: the vertex-side fingerprint component to match."""
+        hv = (hv % self.d).astype(np.int64)
+        if direction == "out":
+            keys = self.key[hv]                            # (q, d, b)
+            ws = self.w[hv]
+        else:
+            keys = self.key[:, hv].transpose(1, 0, 2)
+            ws = self.w[:, hv].transpose(1, 0, 2)
+        side = (keys >> np.uint64(32)) if direction == "out" else \
+            (keys & np.uint64(0xFFFFFFFF))
+        m = (side == np.asarray(fpv, np.uint64)[:, None, None]) & \
+            (keys != _EMPTY)
+        out = np.where(m, ws, 0.0).sum(axis=(1, 2))
+        if self.spill:
+            sp_keys = np.fromiter(self.spill.keys(), np.uint64,
+                                  len(self.spill))
+            sp_w = np.fromiter(self.spill.values(), np.float64,
+                               len(self.spill))
+            sp_f = sp_keys // np.uint64(self.d * self.d)
+            sp_rc = sp_keys % np.uint64(self.d * self.d)
+            sp_pos = (sp_rc // np.uint64(self.d)) if direction == "out" \
+                else (sp_rc % np.uint64(self.d))
+            sp_side = (sp_f >> np.uint64(32)) if direction == "out" else \
+                (sp_f & np.uint64(0xFFFFFFFF))
+            for i in range(len(hv)):
+                sel = (sp_side == np.uint64(fpv[i])) & \
+                    (sp_pos == np.uint64(hv[i]))
+                out[i] += sp_w[sel].sum()
+        return out
+
+    def entries_used(self) -> int:
+        return int((self.key != _EMPTY).sum()) + len(self.spill)
+
+
+class Horae(CompoundQueryMixin):
+    name = "Horae"
+    temporal = True
+
+    def __init__(self, l_bits: int = 20, d: int = 96, b: int = 4,
+                 F: int = 24, seed: int = 11, cpt: bool = False):
+        """l_bits: log2 of the maximum stream duration."""
+        self.l_bits, self.F, self.cpt = l_bits, F, cpt
+        self.step = 2 if cpt else 1
+        self.levels = list(range(0, l_bits + 1, self.step))
+        self.layers = {l: _FpLayer(d, b, seed + l) for l in self.levels}
+        self.seed = seed
+        self.probe_counter = 0
+        if cpt:
+            self.name = "Horae-cpt"
+
+    # -- keying ---------------------------------------------------------
+    def _components(self, vid, level, prefix, side: str):
+        seed = self.seed if side == "s" else self.seed ^ 0x5BD1E995
+        h = hashing.np_mix32(np.asarray(vid, np.uint32), seed)
+        pfx = hashing.np_mix32(
+            np.asarray(prefix, np.uint64).astype(np.uint32) ^
+            np.uint32((level * 0x85EBCA6B) & 0xFFFFFFFF),
+            seed ^ 0xC2B2AE35)
+        hv = h ^ pfx
+        fv = hv & np.uint32((1 << (self.F // 2)) - 1)
+        return (hv >> np.uint32(self.F // 2)), fv
+
+    def insert(self, src, dst, w, t) -> None:
+        src = np.asarray(src, np.uint32)
+        dst = np.asarray(dst, np.uint32)
+        w = np.asarray(w, np.float64)
+        t = np.asarray(t, np.uint64)
+        for l in self.levels:
+            prefix = t >> np.uint64(l)
+            hs, fs = self._components(src, l, prefix, "s")
+            hd, fd = self._components(dst, l, prefix, "d")
+            fp = (fs.astype(np.uint64) << np.uint64(32)) | fd
+            self.layers[l].insert(hs, hd, fp, w)
+
+    def flush(self) -> None:
+        pass
+
+    # -- dyadic decomposition --------------------------------------------
+    def _decompose(self, ts: int, te: int):
+        """[ts, te] (inclusive) -> list of (level, prefix) dyadic blocks
+        restricted to the available levels (cpt skips odd levels)."""
+        out = []
+        lo, hi = int(ts), int(te) + 1       # half-open
+        while lo < hi:
+            l = min((lo & -lo).bit_length() - 1 if lo else self.l_bits,
+                    (hi - lo).bit_length() - 1)
+            l = min(l, self.l_bits)
+            while l % self.step:
+                l -= 1                       # cpt: fall back to finer layer
+            blk = 1 << l
+            out.append((l, lo >> l))
+            lo += blk
+        return out
+
+    def edge_query(self, src, dst, ts: int, te: int):
+        src = np.atleast_1d(np.asarray(src, np.uint32))
+        dst = np.atleast_1d(np.asarray(dst, np.uint32))
+        out = np.zeros(len(src), np.float64)
+        for level, prefix in self._decompose(ts, te):
+            pfx = np.full(len(src), prefix, np.uint64)
+            hs, fs = self._components(src, level, pfx, "s")
+            hd, fd = self._components(dst, level, pfx, "d")
+            fp = (fs.astype(np.uint64) << np.uint64(32)) | fd
+            out += self.layers[level].query_edge(hs, hd, fp)
+            self.probe_counter += len(src)
+        return out
+
+    def vertex_query(self, v, ts: int, te: int, direction: str = "out"):
+        v = np.atleast_1d(np.asarray(v, np.uint32))
+        out = np.zeros(len(v), np.float64)
+        side = "s" if direction == "out" else "d"
+        for level, prefix in self._decompose(ts, te):
+            pfx = np.full(len(v), prefix, np.uint64)
+            hv, fv = self._components(v, level, pfx, side)
+            out += self.layers[level].query_vertex(hv, fv, direction)
+            self.probe_counter += len(v) * self.layers[level].d
+        return out
+
+    def space_bytes(self) -> float:
+        per_entry = (self.F + 32) / 8.0
+        total = 0.0
+        for layer in self.layers.values():
+            total += layer.key.size * per_entry
+            total += len(layer.spill) * (per_entry + 8)
+        return total

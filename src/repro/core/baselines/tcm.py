@@ -1,0 +1,61 @@
+"""TCM (Tang et al., SIGMOD'16): g compressed matrices, one hash each.
+
+Non-temporal: supports edge/vertex queries over the whole stream.  Used
+both as a standalone baseline and as the degenerate case TRQ methods
+reduce to when the query range spans the entire stream.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import hashing
+from repro.core.baselines._compound import CompoundQueryMixin
+
+
+class TCM(CompoundQueryMixin):
+    name = "TCM"
+    temporal = False
+
+    def __init__(self, d: int = 256, g: int = 4, seed: int = 7):
+        self.d, self.g = d, g
+        self.seeds = [seed + 0x9E37 * k for k in range(g)]
+        self.mat = np.zeros((g, d, d), np.float64)
+        self.probe_counter = 0
+
+    def insert(self, src, dst, w, t=None) -> None:
+        src = np.asarray(src, np.uint32)
+        dst = np.asarray(dst, np.uint32)
+        w = np.asarray(w, np.float64)
+        for k, s in enumerate(self.seeds):
+            hs = hashing.np_mix32(src, s) % self.d
+            hd = hashing.np_mix32(dst, s ^ 0x5BD1E995) % self.d
+            np.add.at(self.mat[k], (hs, hd), w)
+
+    def flush(self) -> None:
+        pass
+
+    def edge_query(self, src, dst, ts=None, te=None):
+        src = np.atleast_1d(np.asarray(src, np.uint32))
+        dst = np.atleast_1d(np.asarray(dst, np.uint32))
+        est = np.full((self.g, len(src)), np.inf)
+        for k, s in enumerate(self.seeds):
+            hs = hashing.np_mix32(src, s) % self.d
+            hd = hashing.np_mix32(dst, s ^ 0x5BD1E995) % self.d
+            est[k] = self.mat[k][hs, hd]
+        self.probe_counter += self.g * len(src)
+        return est.min(axis=0)
+
+    def vertex_query(self, v, ts=None, te=None, direction: str = "out"):
+        v = np.atleast_1d(np.asarray(v, np.uint32))
+        est = np.full((self.g, len(v)), np.inf)
+        for k, s in enumerate(self.seeds):
+            seed = s if direction == "out" else s ^ 0x5BD1E995
+            hv = hashing.np_mix32(v, seed) % self.d
+            axis = 1 if direction == "out" else 0
+            sums = self.mat[k].sum(axis=axis)  # over the other side
+            est[k] = sums[hv]
+        self.probe_counter += self.g * self.d * len(v)
+        return est.min(axis=0)
+
+    def space_bytes(self) -> float:
+        return self.mat.size * 4.0   # 32-bit counters in a real deployment

@@ -1,0 +1,359 @@
+"""Compressed-matrix operations: batched insertion, aggregation re-bucketing,
+and probe (query) primitives.  Pure jnp — these double as the reference
+implementations for the Pallas kernels in ``repro.kernels``.
+
+Design notes (see DESIGN.md §3 for the TPU adaptation rationale):
+
+* A node's matrix is an SoA pytree of ``(d, d, b)`` arrays: ``fp_s``,
+  ``fp_d``, ``w``, ``idx`` (MMB chain index pair) and — leaves only — ``t``.
+  ``fp_s == EMPTY`` marks a free entry.
+* Insertion is *chunked*: a whole chunk of stream items is placed with
+  ``r*r`` bounded rounds of (merge, claim-free-slots) vector phases, which
+  preserves the paper's semantics at chunk granularity (stable sorts keep
+  arrival order within a bucket).  Items that fail every mapping bucket are
+  returned compacted for the caller's overflow block — nothing is dropped,
+  so the one-sided error guarantee survives.
+* Aggregation (paper Alg. 2) recovers each stored entry's leaf-level LCG
+  chain in closed form from its (address, fingerprint, chain-index) triple,
+  shifts R fingerprint bits per level into the address, and re-places the
+  entries into the parent matrix with the same machinery.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.core.params import HiggsParams
+
+EMPTY = np.uint32(0xFFFFFFFF)
+_A = 5   # LCG multiplier (a % 4 == 1 -> full period mod 2^k)
+_C = 1   # LCG increment (odd)
+
+
+def lcg_tables(r: int, d: int):
+    """Closed-form LCG coefficients: x_k = A_k * x_0 + B_k (mod d)."""
+    A, B = [], []
+    a_k, b_k = 1, 0
+    for _ in range(r):
+        A.append(a_k % d)
+        B.append(b_k % d)
+        a_k, b_k = a_k * _A, b_k * _A + _C
+    inv = [pow(a % d, -1, d) if d > 1 else 0 for a in A]
+    return (np.asarray(A, np.uint32), np.asarray(B, np.uint32),
+            np.asarray(inv, np.uint32))
+
+
+def chain_from_base(x0, r: int, d: int):
+    """All r chain positions from base address x0; shape (..., r)."""
+    A, B, _ = lcg_tables(r, d)
+    x0 = jnp.asarray(x0, jnp.uint32)[..., None]
+    return (x0 * A + B) % jnp.uint32(d)
+
+
+def chain_base_from_pos(x_k, k, r: int, d: int):
+    """Recover x0 from the value at (data-dependent) chain index k."""
+    A, B, Ainv = lcg_tables(r, d)
+    a_inv = jnp.take(jnp.asarray(Ainv), k)
+    b_k = jnp.take(jnp.asarray(B), k)
+    return (a_inv * (jnp.asarray(x_k, jnp.uint32) - b_k)) % jnp.uint32(d)
+
+
+class NodeState(NamedTuple):
+    """One compressed matrix.  ``t`` is all-zeros for non-leaf nodes."""
+    fp_s: jax.Array  # (d, d, b) uint32
+    fp_d: jax.Array  # (d, d, b) uint32
+    w: jax.Array     # (d, d, b) float32
+    t: jax.Array     # (d, d, b) uint32
+    idx: jax.Array   # (d, d, b) uint32 — MMB chain index pair i*r+j
+
+
+def make_node(d: int, b: int) -> NodeState:
+    # distinct buffers per field (donation forbids aliased arguments)
+    return NodeState(fp_s=jnp.full((d, d, b), EMPTY, jnp.uint32),
+                     fp_d=jnp.full((d, d, b), EMPTY, jnp.uint32),
+                     w=jnp.zeros((d, d, b), jnp.float32),
+                     t=jnp.zeros((d, d, b), jnp.uint32),
+                     idx=jnp.zeros((d, d, b), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# placement: the shared (merge, claim) multi-round engine
+# ---------------------------------------------------------------------------
+
+def place_entries(node: NodeState, fs, fd, rows, cols, w, t, valid,
+                  *, d: int, b: int, r: int, match_time: bool):
+    """Place up to n items into one matrix.
+
+    rows/cols: (n, r) candidate addresses at *this* level, lex probe order
+    (i, j) over the r x r mapping buckets.  Returns (node', placed (n,)).
+    """
+    n = fs.shape[0]
+    placed = ~valid
+    fs = jnp.asarray(fs, jnp.uint32)
+    fd = jnp.asarray(fd, jnp.uint32)
+    t = jnp.asarray(t, jnp.uint32)
+    w = jnp.asarray(w, jnp.float32)
+
+    state = node
+    for k in range(r * r):
+        i, j = k // r, k % r
+        row = rows[:, i].astype(jnp.int32)
+        col = cols[:, j].astype(jnp.int32)
+        active = ~placed
+
+        # --- phase A: merge into an existing matching entry -------------
+        e_fs = state.fp_s[row, col]          # (n, b)
+        e_fd = state.fp_d[row, col]
+        e_t = state.t[row, col]
+        match = (e_fs == fs[:, None]) & (e_fd == fd[:, None]) & (e_fs != EMPTY)
+        if match_time:
+            match &= e_t == t[:, None]
+        has_match = jnp.any(match, axis=-1) & active
+        slot = jnp.argmax(match, axis=-1).astype(jnp.int32)
+        add_w = jnp.where(has_match, w, 0.0)
+        new_w = state.w.at[row, col, slot].add(add_w)
+        state = state._replace(w=new_w)
+        placed = placed | has_match
+        active = ~placed
+
+        # --- phase B: claim free slots, arrival order within a bucket ---
+        bid = (row * d + col).astype(jnp.int32)
+        bid_m = jnp.where(active, bid, d * d)          # inactive to the end
+        order = jnp.argsort(bid_m, stable=True)
+        sb = bid_m[order]
+        pos = jnp.arange(n, dtype=jnp.int32)
+        is_first = jnp.concatenate([jnp.ones((1,), bool), sb[1:] != sb[:-1]])
+        group_start = jax.lax.associative_scan(
+            jnp.maximum, jnp.where(is_first, pos, 0))
+        rank_sorted = pos - group_start
+        rank = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
+
+        emp = (state.fp_s == EMPTY).reshape(d * d, b)
+        emp_before = jnp.cumsum(emp, axis=-1) - emp.astype(jnp.int32)
+        free_cnt = jnp.sum(emp, axis=-1)
+        # slot_table[bucket, m] = entry index of the m-th free slot
+        hit = emp[:, None, :] & (emp_before[:, None, :] ==
+                                 jnp.arange(b, dtype=jnp.int32)[None, :, None])
+        slot_table = jnp.argmax(hit, axis=-1).astype(jnp.int32)  # (d*d, b)
+
+        accept = active & (rank < free_cnt[bid])
+        m = jnp.clip(rank, 0, b - 1)
+        tgt = slot_table[bid, m]
+        # route non-accepted writes out of bounds; mode="drop" discards them,
+        # so accepted writes never race with no-op writes (distinct
+        # (bucket, rank) => distinct target entries among accepted).
+        rowa = jnp.where(accept, row, d)
+        state = NodeState(
+            fp_s=state.fp_s.at[rowa, col, tgt].set(fs, mode="drop"),
+            fp_d=state.fp_d.at[rowa, col, tgt].set(fd, mode="drop"),
+            w=state.w.at[rowa, col, tgt].add(w, mode="drop"),
+            t=state.t.at[rowa, col, tgt].set(t, mode="drop"),
+            idx=state.idx.at[rowa, col, tgt].set(jnp.uint32(k), mode="drop"),
+        )
+        placed = placed | accept
+    return state, placed & valid
+
+
+# ---------------------------------------------------------------------------
+# leaf chunk insertion
+# ---------------------------------------------------------------------------
+
+def _premerge(hs, hd, t, w, valid):
+    """Merge duplicate (hs, hd, t) items: weight summed into the first
+    occurrence, the rest invalidated.  Stable lexicographic grouping."""
+    n = hs.shape[0]
+    o = jnp.argsort(t, stable=True)
+    for key in (hd, hs):
+        o = o[jnp.argsort(key[o], stable=True)]
+    o = o[jnp.argsort(~valid[o], stable=True)]   # invalid items to the end
+    ks, kd, kt, kv = hs[o], hd[o], t[o], valid[o]
+    same = (ks[1:] == ks[:-1]) & (kd[1:] == kd[:-1]) & (kt[1:] == kt[:-1])
+    same = jnp.concatenate([jnp.zeros((1,), bool), same]) & kv
+    seg = jnp.cumsum(~same) - 1
+    wsum = jax.ops.segment_sum(w[o], seg, num_segments=n)
+    first = ~same
+    w_new = jnp.zeros((n,), w.dtype).at[o].set(
+        jnp.where(first, wsum[seg], 0.0))
+    valid_new = jnp.zeros((n,), bool).at[o].set(first & kv)
+    return w_new, valid_new
+
+
+@functools.partial(jax.jit, static_argnames=("params",), donate_argnums=(0,))
+def insert_chunk(node: NodeState, hs, hd, w, t, valid,
+                 params: HiggsParams):
+    """Insert a chunk of raw stream items (already hashed vertex ids) into a
+    leaf matrix.  Returns (node', spill dict, n_spilled)."""
+    d, b, r, F1 = params.d1, params.b, params.r if params.use_mmb else 1, params.F1
+    fs = hashing.fingerprint(hs, F1)
+    fd = hashing.fingerprint(hd, F1)
+    rows = chain_from_base(hashing.address(hs, F1, d), r, d)
+    cols = chain_from_base(hashing.address(hd, F1, d), r, d)
+    w, valid = _premerge(hs, hd, t, w, valid)
+    node, placed = place_entries(node, fs, fd, rows, cols, w, t, valid,
+                                 d=d, b=b, r=r, match_time=True)
+    spill = valid & ~placed
+    order = jnp.argsort(~spill, stable=True)      # spilled first, in order
+    out = {k: v[order] for k, v in
+           dict(hs=hs, hd=hd, w=w, t=t).items()}
+    return node, out, jnp.sum(spill)
+
+
+# ---------------------------------------------------------------------------
+# aggregation (paper Alg. 2, with closed-form chain recovery)
+# ---------------------------------------------------------------------------
+
+def recover_leaf_coords(addr, fp, idx_pair, level: int, params: HiggsParams,
+                        side: str):
+    """From a stored entry at `level`, recover (leaf fp F1 bits, leaf base
+    address), for one side ('s' -> chain index i, 'd' -> j)."""
+    r = params.r if params.use_mmb else 1
+    R, F1, d1 = params.R, params.F1, params.d1
+    s = R * (level - 1)
+    k = (idx_pair // r) if side == "s" else (idx_pair % r)
+    leaf_pos = (addr >> jnp.uint32(s)).astype(jnp.uint32)
+    fbits = addr & jnp.uint32((1 << s) - 1)
+    f1 = (fbits << jnp.uint32(F1 - s)) | fp if s else fp
+    base = chain_base_from_pos(leaf_pos, k.astype(jnp.int32), r, d1)
+    return f1, base
+
+
+def coords_at_level(f1, base, level: int, params: HiggsParams):
+    """(fp_l, rows_l (n, r)) probe/placement coordinates at a tree level,
+    derived by shifting the leaf-level chain (DESIGN.md §3)."""
+    r = params.r if params.use_mmb else 1
+    R, F1, d1 = params.R, params.F1, params.d1
+    s = R * (level - 1)
+    rows1 = chain_from_base(base, r, d1)                      # (n, r)
+    fp_l = f1 & jnp.uint32((1 << (F1 - s)) - 1)
+    if s == 0:
+        return fp_l, rows1
+    top = (f1 >> jnp.uint32(F1 - s)).astype(jnp.uint32)
+    rows_l = (rows1 << jnp.uint32(s)) | top[..., None]
+    return fp_l, rows_l
+
+
+@functools.partial(jax.jit, static_argnames=("params", "level"))
+def aggregate_children(children: NodeState, ob_f1s, ob_f1d, ob_bs, ob_bd,
+                       ob_w, ob_valid, params: HiggsParams, level: int):
+    """Aggregate theta child matrices (stacked on axis 0) at `level` plus
+    their overflow-block items (canonical (f1, base) form) into one parent
+    matrix at level+1.
+
+    Returns (parent NodeState, spill dict {f1s, f1d, base_s, base_d, w},
+    count).  Spilled items go to the parent's host-side overflow block.
+    """
+    theta, d, _, b = children.fp_s.shape
+    r = params.r if params.use_mmb else 1
+    plevel = level + 1
+    dp = params.d(plevel)
+
+    rows_idx = jnp.arange(d, dtype=jnp.uint32)
+    row_grid = jnp.broadcast_to(rows_idx[None, :, None, None], children.fp_s.shape)
+    col_grid = jnp.broadcast_to(rows_idx[None, None, :, None], children.fp_s.shape)
+
+    def flat(x):
+        return x.reshape(-1)
+
+    e_fs, e_fd = flat(children.fp_s), flat(children.fp_d)
+    e_w, e_idx = flat(children.w), flat(children.idx)
+    e_row, e_col = flat(row_grid), flat(col_grid)
+    e_valid = e_fs != EMPTY
+
+    f1s, base_s = recover_leaf_coords(e_row, e_fs, e_idx, level, params, "s")
+    f1d, base_d = recover_leaf_coords(e_col, e_fd, e_idx, level, params, "d")
+
+    if ob_f1s is not None:
+        f1s = jnp.concatenate([f1s, jnp.asarray(ob_f1s, jnp.uint32)])
+        f1d = jnp.concatenate([f1d, jnp.asarray(ob_f1d, jnp.uint32)])
+        base_s = jnp.concatenate([base_s, jnp.asarray(ob_bs, jnp.uint32)])
+        base_d = jnp.concatenate([base_d, jnp.asarray(ob_bd, jnp.uint32)])
+        e_w = jnp.concatenate([e_w, jnp.asarray(ob_w, jnp.float32)])
+        e_valid = jnp.concatenate([e_valid, jnp.asarray(ob_valid, bool)])
+
+    fp_s_p, rows_p = coords_at_level(f1s, base_s, plevel, params)
+    fp_d_p, cols_p = coords_at_level(f1d, base_d, plevel, params)
+
+    parent = make_node(dp, b)
+    t0 = jnp.zeros_like(e_w, dtype=jnp.uint32)
+    parent, placed = place_entries(parent, fp_s_p, fp_d_p, rows_p, cols_p,
+                                   e_w, t0, e_valid,
+                                   d=dp, b=b, r=r, match_time=False)
+    spill = e_valid & ~placed
+    order = jnp.argsort(~spill, stable=True)
+    out = dict(f1s=f1s[order], f1d=f1d[order], base_s=base_s[order],
+               base_d=base_d[order], w=e_w[order])
+    return parent, out, jnp.sum(spill)
+
+
+# ---------------------------------------------------------------------------
+# probes (query primitives) — reference implementations for the kernels
+# ---------------------------------------------------------------------------
+
+def probe_edge(nodes: NodeState, node_mask, fs, fd, rows, cols, ts, te, *,
+               match_time: bool):
+    """Sum of matching entry weights for a batch of edge queries over a
+    batch of matrices.
+
+    nodes: stacked NodeState with leading axis m; node_mask: (m,) bool for
+    padded node lists.
+    fs/fd: (q,), rows/cols: (q, r), ts/te: scalars or (q,).
+    Returns (q,) float32.
+
+    Contract: each query's candidate row/col lists are duplicate-free
+    (guaranteed by the full-period LCG chains for r <= d); duplicated
+    candidates would double count here while the Pallas one-hot probe
+    dedups them.
+    """
+    q, r = rows.shape
+    wmask = jnp.where(node_mask, 1.0, 0.0)[:, None, None, None]
+
+    def one(fs_i, fd_i, row_i, col_i, ts_i, te_i):
+        # (m, r, r, b) gathered buckets
+        efs = nodes.fp_s[:, row_i[:, None], col_i[None, :], :]
+        efd = nodes.fp_d[:, row_i[:, None], col_i[None, :], :]
+        ew = nodes.w[:, row_i[:, None], col_i[None, :], :]
+        # EMPTY (0xFFFFFFFF) can never equal an F-bit fingerprint, so the
+        # equality test alone excludes free entries.
+        match = (efs == fs_i) & (efd == fd_i)
+        if match_time:
+            et = nodes.t[:, row_i[:, None], col_i[None, :], :]
+            match &= (et >= ts_i) & (et <= te_i)
+        return jnp.sum(jnp.where(match, ew * wmask, 0.0))
+
+    ts = jnp.broadcast_to(jnp.asarray(ts, jnp.uint32), (q,))
+    te = jnp.broadcast_to(jnp.asarray(te, jnp.uint32), (q,))
+    return jax.vmap(one)(fs, fd, rows.astype(jnp.int32),
+                         cols.astype(jnp.int32), ts, te)
+
+
+def probe_vertex(nodes: NodeState, node_mask, fv, rows, ts, te, *,
+                 direction: str, match_time: bool):
+    """Vertex query: sum weights over r candidate rows (source direction)
+    or columns (destination direction) across m matrices.
+
+    fv: (q,), rows: (q, r).  Returns (q,) float32.
+    """
+    wmask = jnp.where(node_mask, 1.0, 0.0)[:, None, None, None]
+
+    def one(fv_i, row_i):
+        if direction == "out":
+            efp = nodes.fp_s[:, row_i, :, :]       # (m, r, d, b)
+            ew = nodes.w[:, row_i, :, :]
+            et = nodes.t[:, row_i, :, :]
+        else:
+            efp = nodes.fp_d[:, :, row_i, :].transpose(0, 2, 1, 3)
+            ew = nodes.w[:, :, row_i, :].transpose(0, 2, 1, 3)
+            et = nodes.t[:, :, row_i, :].transpose(0, 2, 1, 3)
+        match = efp == fv_i                        # EMPTY never matches
+        if match_time:
+            match &= (et >= ts) & (et <= te)
+        return jnp.sum(jnp.where(match, ew * wmask, 0.0))
+
+    ts = jnp.asarray(ts, jnp.uint32)
+    te = jnp.asarray(te, jnp.uint32)
+    return jax.vmap(one)(fv, rows.astype(jnp.int32))

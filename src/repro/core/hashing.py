@@ -1,0 +1,97 @@
+"""Vertex hashing: 32-bit mix, fingerprint/address split, LCG address chains.
+
+The paper (Eq. 1) splits a vertex hash H(v) into an F1-bit fingerprint
+(low bits) and an address (high bits, mod d1):
+
+    f(v) = H(v) & (2^F1 - 1)         h(v) = (H(v) >> F1) % d1
+
+The MMB optimization (Sec. IV-C) derives r candidate addresses per vertex
+with a linear-congruential chain.  With d a power of two and (a % 4 == 1,
+c odd) the chain has full period, so the r candidate rows of one vertex are
+pairwise distinct for r <= d — queries can therefore match on fingerprints
+alone without double counting.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+_MIX1 = np.uint32(0x7FEB352D)
+_MIX2 = np.uint32(0x846CA68B)
+_LCG_A = 5   # a % 4 == 1
+_LCG_C = 1   # odd
+
+
+def mix32(x, seed: int):
+    """32-bit finalizer-style hash; works on jnp or np uint32 arrays."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ jnp.uint32(seed)
+    x = x ^ (x >> 16)
+    x = x * _MIX1
+    x = x ^ (x >> 15)
+    x = x * _MIX2
+    x = x ^ (x >> 16)
+    return x
+
+
+def fingerprint(h, F: int):
+    """Low-F-bit fingerprint of hash values."""
+    return jnp.asarray(h, jnp.uint32) & jnp.uint32((1 << F) - 1)
+
+
+def address(h, F: int, d: int):
+    """Base address: high bits of the hash, mod matrix side d (power of 2)."""
+    return (jnp.asarray(h, jnp.uint32) >> F) % jnp.uint32(d)
+
+
+def lcg_chain(addr0, r: int, d: int):
+    """Stack of r candidate addresses, shape (..., r); chain[0] == addr0."""
+    addrs = [jnp.asarray(addr0, jnp.uint32)]
+    for _ in range(r - 1):
+        addrs.append((addrs[-1] * jnp.uint32(_LCG_A) + jnp.uint32(_LCG_C))
+                     % jnp.uint32(d))
+    return jnp.stack(addrs, axis=-1)
+
+
+def shift_up(fp, addr, R: int, F_child: int):
+    """Alg. 2 shift: move the top R fingerprint bits into the address.
+
+    Returns (fp_parent, addr_parent) for one side of an edge when a child
+    entry at (addr, fp) is re-bucketed into the parent matrix.
+    """
+    fp = jnp.asarray(fp, jnp.uint32)
+    addr = jnp.asarray(addr, jnp.uint32)
+    top = fp >> jnp.uint32(F_child - R)               # top R bits
+    fp_p = fp & jnp.uint32((1 << (F_child - R)) - 1)  # low F_child-R bits
+    addr_p = (addr << jnp.uint32(R)) | top
+    return fp_p, addr_p
+
+
+def level_fp_addr(hashes, F1: int, d1: int, level: int, R: int):
+    """Fingerprint/base-address of raw hashes directly at a given level.
+
+    Equivalent to applying shift_up (level-1) times to the leaf split; used
+    by queries to compute probe coordinates at any tree level.
+    """
+    F = F1 - R * (level - 1)
+    d = d1 << (R * (level - 1))
+    return fingerprint(hashes, F), address(hashes, F, d)
+
+
+def np_mix32(x: np.ndarray, seed: int) -> np.ndarray:
+    """NumPy twin of mix32 for host-side reference implementations."""
+    x = np.asarray(x, np.uint32)
+    x = x ^ np.uint32(seed)
+    x = x ^ (x >> 16)
+    x = (x * _MIX1).astype(np.uint32)
+    x = x ^ (x >> 15)
+    x = (x * _MIX2).astype(np.uint32)
+    x = x ^ (x >> 16)
+    return x
+
+
+def np_lcg_chain(addr0: np.ndarray, r: int, d: int) -> np.ndarray:
+    addrs = [np.asarray(addr0, np.uint64)]
+    for _ in range(r - 1):
+        addrs.append((addrs[-1] * _LCG_A + _LCG_C) % d)
+    return np.stack(addrs, axis=-1).astype(np.uint32)

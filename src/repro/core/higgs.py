@@ -1,0 +1,489 @@
+"""HIGGS: the item-based, bottom-up hierarchical graph-stream summary.
+
+Host/device split (DESIGN.md §3): tree metadata (leaf start/end timestamps,
+per-level node counts, overflow blocks) lives on the host; the compressed
+matrices live on device as per-level stacked pools.  Insertion is chunked —
+each chunk of ``params.chunk_size`` stream items becomes one leaf, with
+equal-timestamp runs never split across leaves (this subsumes the paper's
+Overflow Block trigger; a run longer than a chunk spills into the leaf's OB,
+exactly the OB's role in the paper).  Aggregation (paper Alg. 2) fires
+bottom-up whenever theta nodes of a level complete.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cmatrix, hashing
+from repro.core.cmatrix import EMPTY, NodeState
+from repro.core.params import HiggsParams
+
+
+def _pow2_pad(n: int, lo: int = 8) -> int:
+    return max(lo, 1 << max(0, (n - 1).bit_length()))
+
+
+class _LevelPool:
+    """Closed-node matrices for one tree level.
+
+    Host numpy storage with true in-place appends (a device append would
+    copy the whole pool per leaf on CPU backends); query gathers transfer
+    only the probed subset.  On a real TPU deployment the pool would stay
+    device-resident with donated updates — see DESIGN.md §3.
+    """
+
+    def __init__(self, d: int, b: int):
+        self.d, self.b = d, b
+        self.n = 0
+        self.cap = 0
+        self.arrs: Optional[dict] = None
+
+    def _grow(self, new_cap: int) -> None:
+        shape = (new_cap, self.d, self.d, self.b)
+        new = {name: np.full(shape, EMPTY, np.uint32)
+               if name in ("fp_s", "fp_d")
+               else np.zeros(shape, np.float32 if name == "w" else np.uint32)
+               for name in NodeState._fields}
+        if self.arrs is not None:
+            for name in NodeState._fields:
+                new[name][: self.n] = self.arrs[name][: self.n]
+        self.arrs = new
+        self.cap = new_cap
+
+    def append(self, node: NodeState) -> int:
+        if self.n == self.cap:
+            self._grow(max(4, self.cap * 2))
+        for name in NodeState._fields:
+            self.arrs[name][self.n] = np.asarray(getattr(node, name))
+        idx = self.n
+        self.n += 1
+        return idx
+
+    def gather(self, ids: np.ndarray, pad_to: int):
+        """(NodeState stacked to pad_to, mask) for a list of node ids."""
+        m = len(ids)
+        idx = np.zeros((pad_to,), np.int64)
+        idx[:m] = ids
+        mask = np.zeros((pad_to,), bool)
+        mask[:m] = True
+        nodes = NodeState(*(jnp.asarray(self.arrs[name][idx])
+                            for name in NodeState._fields))
+        return nodes, jnp.asarray(mask)
+
+
+class _OverflowStore:
+    """Host-side overflow blocks: canonical entries per (level, node)."""
+
+    FIELDS = ("f1s", "f1d", "bs", "bd", "w", "t")
+
+    def __init__(self):
+        self.data: dict[tuple[int, int], dict[str, np.ndarray]] = {}
+
+    def add(self, level: int, node: int, **cols) -> None:
+        n = len(cols["w"])
+        if n == 0:
+            return
+        rec = {k: np.asarray(cols.get(k, np.zeros(n)),
+                             np.float64 if k == "w" else np.uint32)
+               for k in self.FIELDS}
+        key = (level, node)
+        if key in self.data:
+            self.data[key] = {k: np.concatenate([self.data[key][k], rec[k]])
+                              for k in self.FIELDS}
+        else:
+            self.data[key] = rec
+
+    def get(self, level: int, node: int):
+        return self.data.get((level, node))
+
+    def total_entries(self) -> int:
+        return sum(len(v["w"]) for v in self.data.values())
+
+
+class HiggsSketch:
+    """The full HIGGS structure with TRQ primitives."""
+
+    def __init__(self, params: HiggsParams = HiggsParams()):
+        self.params = params
+        self.pools: list[_LevelPool] = [
+            _LevelPool(params.d1, params.b)]       # level 1 (leaves)
+        self.leaf_starts = np.zeros((0,), np.uint64)
+        self.leaf_ends = np.zeros((0,), np.uint64)
+        self.ob = _OverflowStore()
+        self._buf: list[np.ndarray] = []           # pending raw items
+        self._buf_len = 0
+        self.n_items = 0
+        self.probe_counter = 0                     # buckets probed (queries)
+        self._chunk_pad = _pow2_pad(params.chunk_size, lo=64)
+
+    # ------------------------------------------------------------------
+    # insertion
+    # ------------------------------------------------------------------
+
+    def insert(self, src, dst, w, t) -> None:
+        """Insert a batch of stream items (arrival order, t non-decreasing).
+
+        src/dst: uint32 vertex ids; w: weights (negative = deletion);
+        t: uint32 timestamps.
+        """
+        batch = np.stack([
+            np.asarray(src, np.uint32), np.asarray(dst, np.uint32),
+            np.asarray(w, np.float32).view(np.uint32),
+            np.asarray(t, np.uint32)], axis=0)
+        self._buf.append(batch)
+        self._buf_len += batch.shape[1]
+        self.n_items += batch.shape[1]
+        self._drain(final=False)
+
+    def flush(self) -> None:
+        """Close the current partial leaf (end of stream / snapshot)."""
+        self._drain(final=True)
+
+    def _drain(self, final: bool) -> None:
+        cs = self.params.chunk_size
+        while self._buf_len >= cs or (final and self._buf_len > 0):
+            buf = np.concatenate(self._buf, axis=1) if len(self._buf) > 1 \
+                else self._buf[0]
+            self._buf = [buf]
+            take = min(cs, buf.shape[1])
+            ts_col = buf[3]
+            if take < buf.shape[1] and ts_col[take] == ts_col[take - 1]:
+                # never split a run of equal timestamps across leaves
+                boundary_t = ts_col[take - 1]
+                run_end = int(np.searchsorted(ts_col, boundary_t, "right"))
+                run_start = int(np.searchsorted(ts_col, boundary_t, "left"))
+                # a run longer than a chunk becomes an oversize leaf whose
+                # excess lands in the overflow block (the paper's OB case)
+                take = run_end if run_start == 0 else run_start
+            if not final and take == buf.shape[1]:
+                # cannot prove the trailing timestamp run has ended — wait
+                return
+            chunk, rest = buf[:, :take], buf[:, take:]
+            self._buf = [rest] if rest.shape[1] else []
+            self._buf_len = rest.shape[1]
+            self._close_leaf(chunk)
+
+    def _close_leaf(self, chunk: np.ndarray) -> None:
+        p = self.params
+        hs = hashing.np_mix32(chunk[0], p.seed)
+        hd = hashing.np_mix32(chunk[1], p.seed ^ 0x5BD1E995)
+        self._close_leaf_hashed(hs, hd, chunk[2].view(np.float32),
+                                chunk[3].astype(np.uint32))
+
+    def _close_leaf_hashed(self, hs, hd, w, t) -> None:
+        p = self.params
+        n = len(hs)
+        pad = _pow2_pad(n, lo=64)
+
+        def padded(x, dt):
+            out = np.zeros((pad,), dt)
+            out[:n] = x
+            return jnp.asarray(out)
+
+        valid = np.zeros((pad,), bool)
+        valid[:n] = True
+        node = cmatrix.make_node(p.d1, p.b)
+        node, spill, n_spill = cmatrix.insert_chunk(
+            node, padded(hs, np.uint32), padded(hd, np.uint32),
+            padded(w, np.float32), padded(t, np.uint32),
+            jnp.asarray(valid), p)
+        leaf_id = self.pools[0].append(node)
+        self.leaf_starts = np.append(self.leaf_starts, np.uint64(t[0]))
+        self.leaf_ends = np.append(self.leaf_ends, np.uint64(t[-1]))
+
+        k = int(n_spill)
+        if k:
+            s_hs = np.asarray(spill["hs"][:k])
+            s_hd = np.asarray(spill["hd"][:k])
+            if p.use_ob:
+                self.ob.add(1, leaf_id,
+                            f1s=s_hs & p.fp_mask, f1d=s_hd & p.fp_mask,
+                            bs=(s_hs >> p.F1) % p.d1,
+                            bd=(s_hd >> p.F1) % p.d1,
+                            w=np.asarray(spill["w"][:k], np.float64),
+                            t=np.asarray(spill["t"][:k]))
+            else:
+                # ABLATION (paper Sec. IV-C): without overflow blocks the
+                # spill opens a NEW leaf whose key may duplicate an
+                # existing timestamp — boundary search then misattributes
+                # fine-grained ranges (the error OB exists to prevent)
+                self._close_leaf_hashed(
+                    s_hs, s_hd, np.asarray(spill["w"][:k], np.float32),
+                    np.asarray(spill["t"][:k], np.uint32))
+        self._maybe_aggregate()
+
+    # ------------------------------------------------------------------
+    # aggregation cascade
+    # ------------------------------------------------------------------
+
+    def _maybe_aggregate(self) -> None:
+        p = self.params
+        level = 1
+        while True:
+            if level + 1 > p.max_levels:
+                return                              # fingerprints exhausted
+            pool = self.pools[level - 1]
+            parent_n = self.pools[level].n if level < len(self.pools) else 0
+            if pool.n - parent_n * p.theta < p.theta:
+                return
+            if level >= len(self.pools):
+                self.pools.append(_LevelPool(p.d(level + 1), p.b))
+            while self.pools[level - 1].n - self.pools[level].n * p.theta \
+                    >= p.theta:
+                u = self.pools[level].n             # parent index to build
+                child_ids = np.arange(u * p.theta, (u + 1) * p.theta)
+                children, _ = pool.gather(child_ids, p.theta)
+                ob_cols = self._gather_child_obs(level, child_ids)
+                parent, spill, n_spill = cmatrix.aggregate_children(
+                    children, *ob_cols, p, level)
+                self.pools[level].append(parent)
+                k = int(n_spill)
+                if k:
+                    self.ob.add(level + 1, u,
+                                f1s=np.asarray(spill["f1s"][:k]),
+                                f1d=np.asarray(spill["f1d"][:k]),
+                                bs=np.asarray(spill["base_s"][:k]),
+                                bd=np.asarray(spill["base_d"][:k]),
+                                w=np.asarray(spill["w"][:k], np.float64),
+                                t=np.zeros((k,), np.uint32))
+            level += 1
+
+    def _gather_child_obs(self, level: int, child_ids: np.ndarray):
+        recs = [self.ob.get(level, int(c)) for c in child_ids]
+        total = sum(len(r["w"]) for r in recs if r)
+        if total == 0:
+            return (None, None, None, None, None, None)
+        pad = _pow2_pad(total, lo=16)
+        cols = {k: np.zeros((pad,), np.uint32) for k in ("f1s", "f1d",
+                                                         "bs", "bd")}
+        wcol = np.zeros((pad,), np.float32)
+        vcol = np.zeros((pad,), bool)
+        off = 0
+        for r in recs:
+            if not r:
+                continue
+            m = len(r["w"])
+            for k in ("f1s", "f1d", "bs", "bd"):
+                cols[k][off:off + m] = r[k]
+            wcol[off:off + m] = r["w"]
+            vcol[off:off + m] = True
+            off += m
+        return (jnp.asarray(cols["f1s"]), jnp.asarray(cols["f1d"]),
+                jnp.asarray(cols["bs"]), jnp.asarray(cols["bd"]),
+                jnp.asarray(wcol), jnp.asarray(vcol))
+
+    # ------------------------------------------------------------------
+    # boundary search (paper Alg. 3) — canonical theta-ary decomposition
+    # ------------------------------------------------------------------
+
+    def boundary_search(self, ts: int, te: int):
+        """Decompose [ts, te] into (plan, filtered_leaves):
+
+        plan: dict level -> list of node ids queried *without* time filter;
+        filtered_leaves: leaf ids queried *with* the [ts, te] filter.
+        """
+        n1 = len(self.leaf_starts)
+        if n1 == 0 or te < ts:
+            return {}, []
+        li = int(np.searchsorted(self.leaf_starts, np.uint64(ts), "right")) - 1
+        li = max(li, 0)
+        ri = int(np.searchsorted(self.leaf_starts, np.uint64(te), "right")) - 1
+        if ri < 0 or (li == ri and int(self.leaf_ends[li]) < ts):
+            return {}, []                           # range between leaves
+        # boundary leaves fully inside the range join the interior cover;
+        # partially covered ones are queried with the exact time filter
+        lo, hi = li, ri
+        filtered = []
+        if not (ts <= int(self.leaf_starts[li])
+                and te >= int(self.leaf_ends[li])):
+            filtered.append(li)
+            lo = li + 1
+        if ri >= lo and not te >= int(self.leaf_ends[ri]):
+            if ri != li:
+                filtered.append(ri)
+            hi = ri - 1
+        plan: dict[int, list[int]] = {}
+        theta = self.params.theta
+        pos = lo
+        while pos <= hi:
+            lvl = 0
+            blk = 1
+            # largest aligned, existing block starting at pos
+            while (pos % (blk * theta) == 0 and pos + blk * theta - 1 <= hi
+                   and lvl + 2 <= len(self.pools)
+                   and (pos // (blk * theta)) < self.pools[lvl + 1].n):
+                blk *= theta
+                lvl += 1
+            plan.setdefault(lvl + 1, []).append(pos // blk)
+            pos += blk
+        return plan, filtered
+
+    # ------------------------------------------------------------------
+    # TRQ primitives
+    # ------------------------------------------------------------------
+
+    def _query_coords(self, vid: np.ndarray, side: str):
+        p = self.params
+        seed = p.seed if side == "s" else p.seed ^ 0x5BD1E995
+        h = hashing.np_mix32(np.asarray(vid, np.uint32), seed)
+        f1 = h & p.fp_mask
+        base = (h >> p.F1) % p.d1
+        return jnp.asarray(f1), jnp.asarray(base)
+
+    def edge_query(self, src, dst, ts: int, te: int) -> np.ndarray:
+        """Aggregated weight of edges src->dst within [ts, te]; (q,)."""
+        p = self.params
+        src = np.atleast_1d(np.asarray(src, np.uint32))
+        dst = np.atleast_1d(np.asarray(dst, np.uint32))
+        f1s, bs = self._query_coords(src, "s")
+        f1d, bd = self._query_coords(dst, "d")
+        plan, filtered = self.boundary_search(ts, te)
+        out = np.zeros((len(src),), np.float64)
+        for level, ids in sorted(plan.items()):
+            out += self._probe_level_edge(level, np.asarray(ids), f1s, bs,
+                                          f1d, bd, ts, te, filter_time=False)
+            out += self._ob_edge(level, ids, f1s, bs, f1d, bd, ts, te,
+                                 filter_time=False)
+        if filtered:
+            out += self._probe_level_edge(1, np.asarray(filtered), f1s, bs,
+                                          f1d, bd, ts, te, filter_time=True)
+            out += self._ob_edge(1, filtered, f1s, bs, f1d, bd, ts, te,
+                                 filter_time=True)
+        return out
+
+    def vertex_query(self, v, ts: int, te: int,
+                     direction: str = "out") -> np.ndarray:
+        """Aggregated weight of v's outgoing/incoming edges in [ts, te]."""
+        p = self.params
+        v = np.atleast_1d(np.asarray(v, np.uint32))
+        side = "s" if direction == "out" else "d"
+        f1, base = self._query_coords(v, side)
+        plan, filtered = self.boundary_search(ts, te)
+        out = np.zeros((len(v),), np.float64)
+        for level, ids in sorted(plan.items()):
+            out += self._probe_level_vertex(level, np.asarray(ids), f1, base,
+                                            ts, te, direction, False)
+            out += self._ob_vertex(level, ids, f1, base, ts, te, direction,
+                                   False)
+        if filtered:
+            out += self._probe_level_vertex(1, np.asarray(filtered), f1,
+                                            base, ts, te, direction, True)
+            out += self._ob_vertex(1, filtered, f1, base, ts, te, direction,
+                                   True)
+        return out
+
+    def path_query(self, path_vertices, ts: int, te: int) -> float:
+        """Sum of edge-query results along a path (paper Sec. III)."""
+        srcs = np.asarray(path_vertices[:-1], np.uint32)
+        dsts = np.asarray(path_vertices[1:], np.uint32)
+        return float(np.sum(self.edge_query(srcs, dsts, ts, te)))
+
+    def subgraph_query(self, edges, ts: int, te: int) -> float:
+        """Sum of edge-query results over a set of (src, dst) pairs."""
+        srcs = np.asarray([e[0] for e in edges], np.uint32)
+        dsts = np.asarray([e[1] for e in edges], np.uint32)
+        return float(np.sum(self.edge_query(srcs, dsts, ts, te)))
+
+    # -- device probes ---------------------------------------------------
+
+    def _probe_level_edge(self, level, ids, f1s, bs, f1d, bd, ts, te,
+                          filter_time):
+        if len(ids) == 0 or level > len(self.pools) or \
+                self.pools[level - 1].n == 0:
+            return 0.0
+        p = self.params
+        r = p.r if p.use_mmb else 1
+        self.probe_counter += len(ids) * r * r * len(np.asarray(f1s))
+        nodes, mask = self.pools[level - 1].gather(ids, _pow2_pad(len(ids)))
+        fs_l, rows = cmatrix.coords_at_level(f1s, bs, level, p)
+        fd_l, cols = cmatrix.coords_at_level(f1d, bd, level, p)
+        res = cmatrix.probe_edge(nodes, mask, fs_l, fd_l, rows, cols,
+                                 np.uint32(ts), np.uint32(te),
+                                 match_time=filter_time)
+        return np.asarray(res, np.float64)
+
+    def _probe_level_vertex(self, level, ids, f1, base, ts, te, direction,
+                            filter_time):
+        if len(ids) == 0 or level > len(self.pools) or \
+                self.pools[level - 1].n == 0:
+            return 0.0
+        p = self.params
+        r = p.r if p.use_mmb else 1
+        self.probe_counter += len(ids) * r * p.d(level) * \
+            len(np.asarray(f1))
+        nodes, mask = self.pools[level - 1].gather(ids, _pow2_pad(len(ids)))
+        f_l, rows = cmatrix.coords_at_level(f1, base, level, p)
+        res = cmatrix.probe_vertex(nodes, mask, f_l, rows, np.uint32(ts),
+                                   np.uint32(te), direction=direction,
+                                   match_time=filter_time)
+        return np.asarray(res, np.float64)
+
+    # -- host-side overflow-block probes ----------------------------------
+
+    def _ob_edge(self, level, ids, f1s, bs, f1d, bd, ts, te, filter_time):
+        f1s, bs = np.asarray(f1s), np.asarray(bs)
+        f1d, bd = np.asarray(f1d), np.asarray(bd)
+        out = np.zeros((len(f1s),), np.float64)
+        for nid in ids:
+            rec = self.ob.get(level, int(nid))
+            if not rec:
+                continue
+            tok = np.ones(len(rec["w"]), bool) if not filter_time else \
+                (rec["t"] >= ts) & (rec["t"] <= te)
+            m = (rec["f1s"][None, :] == f1s[:, None]) & \
+                (rec["f1d"][None, :] == f1d[:, None]) & \
+                (rec["bs"][None, :] == bs[:, None]) & \
+                (rec["bd"][None, :] == bd[:, None]) & tok[None, :]
+            out += (m * rec["w"][None, :]).sum(axis=1)
+        return out
+
+    def _ob_vertex(self, level, ids, f1, base, ts, te, direction,
+                   filter_time):
+        f1, base = np.asarray(f1), np.asarray(base)
+        fk, bk = ("f1s", "bs") if direction == "out" else ("f1d", "bd")
+        out = np.zeros((len(f1),), np.float64)
+        for nid in ids:
+            rec = self.ob.get(level, int(nid))
+            if not rec:
+                continue
+            tok = np.ones(len(rec["w"]), bool) if not filter_time else \
+                (rec["t"] >= ts) & (rec["t"] <= te)
+            m = (rec[fk][None, :] == f1[:, None]) & \
+                (rec[bk][None, :] == base[:, None]) & tok[None, :]
+            out += (m * rec["w"][None, :]).sum(axis=1)
+        return out
+
+    # ------------------------------------------------------------------
+    # accounting
+    # ------------------------------------------------------------------
+
+    def space_bytes(self) -> float:
+        """Space per the paper's bit layout (Sec. V-A), not numpy overhead."""
+        p = self.params
+        total_bits = 0.0
+        for level, pool in enumerate(self.pools, start=1):
+            ent = p.leaf_entry_bits() if level == 1 else \
+                p.node_entry_bits(level)
+            total_bits += pool.n * p.d(level) ** 2 * p.b * ent
+        for (level, _), rec in self.ob.data.items():
+            ent = p.leaf_entry_bits() if level == 1 else \
+                p.node_entry_bits(level)
+            total_bits += len(rec["w"]) * ent
+        total_bits += 64 * len(self.leaf_starts)    # B-tree keys
+        return total_bits / 8.0
+
+    def utilization(self) -> float:
+        """Fraction of leaf-matrix entries occupied (paper Eq. 7)."""
+        pool = self.pools[0]
+        if pool.n == 0:
+            return 0.0
+        fp = pool.arrs["fp_s"][: pool.n]
+        return float((fp != EMPTY).mean())
+
+    @property
+    def n_levels(self) -> int:
+        return len([p_ for p_ in self.pools if p_.n > 0])

@@ -1,0 +1,67 @@
+"""Exact ground truth for graph-stream TRQs (dict-based, host-side).
+
+Used by tests (one-sided-error and exactness invariants) and by the
+accuracy benchmarks (AAE/ARE need true values, paper Eq. 17).
+"""
+from __future__ import annotations
+
+import bisect
+from collections import defaultdict
+
+import numpy as np
+
+
+class ExactOracle:
+    """Stores every stream item; answers TRQs exactly."""
+
+    def __init__(self):
+        # edge -> sorted list of (t, w)
+        self._edges: dict[tuple[int, int], list] = defaultdict(list)
+        self._out: dict[int, list] = defaultdict(list)
+        self._in: dict[int, list] = defaultdict(list)
+        self.n_items = 0
+
+    def insert(self, src, dst, w, t) -> None:
+        src = np.asarray(src, np.uint32).ravel()
+        dst = np.asarray(dst, np.uint32).ravel()
+        w = np.asarray(w, np.float64).ravel()
+        t = np.asarray(t, np.uint64).ravel()
+        for s, d, wi, ti in zip(src.tolist(), dst.tolist(), w.tolist(),
+                                t.tolist()):
+            self._edges[(s, d)].append((ti, wi))
+            self._out[s].append((ti, wi))
+            self._in[d].append((ti, wi))
+            self.n_items += 1
+
+    @staticmethod
+    def _range_sum(items: list, ts: int, te: int) -> float:
+        # items arrive time-ordered (stream), so bisect directly
+        lo = bisect.bisect_left(items, (ts, -np.inf))
+        hi = bisect.bisect_right(items, (te, np.inf))
+        return float(sum(w for _, w in items[lo:hi]))
+
+    def edge_query(self, src, dst, ts: int, te: int):
+        src = np.atleast_1d(np.asarray(src, np.uint32))
+        dst = np.atleast_1d(np.asarray(dst, np.uint32))
+        return np.array([self._range_sum(self._edges.get((int(s), int(d)), []),
+                                         ts, te)
+                         for s, d in zip(src, dst)], np.float64)
+
+    def vertex_query(self, v, ts: int, te: int, direction: str = "out"):
+        v = np.atleast_1d(np.asarray(v, np.uint32))
+        table = self._out if direction == "out" else self._in
+        return np.array([self._range_sum(table.get(int(x), []), ts, te)
+                         for x in v], np.float64)
+
+    def path_query(self, path_vertices, ts: int, te: int) -> float:
+        return float(sum(self.edge_query(path_vertices[:-1],
+                                         path_vertices[1:], ts, te)))
+
+    def subgraph_query(self, edges, ts: int, te: int) -> float:
+        srcs = [e[0] for e in edges]
+        dsts = [e[1] for e in edges]
+        return float(sum(self.edge_query(srcs, dsts, ts, te)))
+
+    def total_weight(self, ts: int, te: int) -> float:
+        return float(sum(self._range_sum(v, ts, te)
+                         for v in self._edges.values()))

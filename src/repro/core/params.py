@@ -1,0 +1,82 @@
+"""Configuration for the HIGGS sketch and its baselines.
+
+Defaults follow the paper's experimental setup (Sec. VI-A): d1 = 16,
+F1 = 19, b = 3 entries per bucket, r = 4 mapping addresses per vertex
+(=> 16 mapping buckets per edge), theta = 4 children per node (R = 1
+fingerprint bit shifted into the address per level and side).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class HiggsParams:
+    d1: int = 16            # leaf compressed-matrix side length (power of two)
+    F1: int = 19            # leaf fingerprint length in bits
+    b: int = 3              # entries per bucket
+    r: int = 4              # mapping addresses per vertex (MMB); r*r buckets/edge
+    theta: int = 4          # max children per node; must be a power of four
+    chunk_fill: float = 0.85  # target fill fraction of a leaf per chunk
+    seed: int = 0x9E3779B9  # hash seed
+    use_mmb: bool = True    # multiple-mapping-buckets optimization
+    use_ob: bool = True     # overflow blocks (lossless spill)
+    entry_bytes: float = 0.0  # space accounting override; 0 => computed
+
+    def __post_init__(self) -> None:
+        if self.d1 & (self.d1 - 1):
+            raise ValueError("d1 must be a power of two")
+        root = round(math.sqrt(self.theta))
+        if root * root != self.theta or root & (root - 1):
+            raise ValueError("theta must be a power of four")
+        if self.F1 <= 0 or self.b <= 0 or self.r <= 0:
+            raise ValueError("F1, b, r must be positive")
+
+    @property
+    def R(self) -> int:
+        """Fingerprint bits shifted into the address per aggregation level."""
+        return int(math.log2(math.sqrt(self.theta)))
+
+    def d(self, level: int) -> int:
+        """Matrix side length at 1-based tree level."""
+        return self.d1 * (1 << (self.R * (level - 1)))
+
+    def F(self, level: int) -> int:
+        """Fingerprint length in bits at 1-based tree level."""
+        f = self.F1 - self.R * (level - 1)
+        if f <= 0:
+            raise ValueError(f"fingerprint exhausted at level {level}")
+        return f
+
+    @property
+    def max_levels(self) -> int:
+        return (self.F1 - 1) // max(self.R, 1) + 1
+
+    @property
+    def leaf_capacity(self) -> int:
+        """Entries a leaf matrix can hold."""
+        return self.b * self.d1 * self.d1
+
+    @property
+    def chunk_size(self) -> int:
+        """Stream items routed to one leaf (item-based leaf sizing)."""
+        return max(1, int(self.leaf_capacity * self.chunk_fill))
+
+    def leaf_entry_bits(self) -> int:
+        """Bits per leaf entry: two fingerprints + weight + timestamp offset
+        + MMB index pair (2 * ceil(log2 r)), per the paper's layout."""
+        idx_bits = 2 * max(1, math.ceil(math.log2(max(self.r, 2))))
+        return 2 * self.F1 + 32 + 32 + (idx_bits if self.use_mmb else 0)
+
+    def node_entry_bits(self, level: int) -> int:
+        """Bits per non-leaf entry at a given level (no timestamp)."""
+        idx_bits = 2 * max(1, math.ceil(math.log2(max(self.r, 2))))
+        return 2 * self.F(level) + 32 + (idx_bits if self.use_mmb else 0)
+
+    @property
+    def fp_mask(self) -> int:
+        return (1 << self.F1) - 1
+
+
+DEFAULT_PARAMS = HiggsParams()

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: faithful Algorithm-1 leaf insertion, fully in VMEM.
+
+The whole leaf matrix (d=16: ~15 KiB across the five SoA fields) and the
+chunk (~40 KiB) fit comfortably in VMEM, so one kernel invocation performs
+the paper's *sequential* per-edge probe loop with zero HBM round-trips —
+the TPU analogue of the paper's cache-resident subtree argument.  Edge
+order is preserved exactly (fori_loop), making this the bit-faithful
+reference path; the vectorized chunk path (``cmatrix.insert_chunk``) is
+the throughput-oriented alternative (DESIGN.md §3).
+
+Layout: SoA refs, all blocks whole (grid=()); matrix refs are
+input/output aliased so the update is in-place in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.cmatrix import EMPTY, NodeState
+
+
+def _kernel(fs_ref, fd_ref, rows_ref, cols_ref, w_ref, t_ref, valid_ref,
+            fps_in, fpd_in, wm_in, tm_in, idx_in,
+            fps_ref, fpd_ref, wm_ref, tm_ref, idx_ref, spill_ref,
+            *, r: int, n: int):
+    # copy aliased inputs is unnecessary — in/out aliasing maps them to the
+    # same VMEM buffers; the *_in refs are unused but keep the signature
+    # explicit for the aliasing contract.
+    del fps_in, fpd_in, wm_in, tm_in, idx_in
+
+    def edge_body(e, _):
+        fs = fs_ref[e]
+        fd = fd_ref[e]
+        wv = w_ref[e]
+        tv = t_ref[e]
+        is_valid = valid_ref[e] != 0
+
+        def probe_body(k, done):
+            i = k // r
+            j = k % r
+            row = rows_ref[e, i]
+            col = cols_ref[e, j]
+            bfs = fps_ref[row, col, :]
+            bfd = fpd_ref[row, col, :]
+            bw = wm_ref[row, col, :]
+            bt = tm_ref[row, col, :]
+            bidx = idx_ref[row, col, :]
+
+            match = (bfs == fs) & (bfd == fd) & (bt == tv) & (bfs != EMPTY)
+            has_match = jnp.any(match)
+            mslot = jnp.argmax(match)
+            empty = bfs == EMPTY
+            has_empty = jnp.any(empty)
+            eslot = jnp.argmax(empty)
+
+            do_merge = (~done) & has_match
+            do_insert = (~done) & (~has_match) & has_empty
+            slot = jnp.where(do_merge, mslot, eslot)
+            onehot = (jax.lax.iota(jnp.int32, bfs.shape[0]) == slot)
+            write = do_merge | do_insert
+            ins = do_insert & onehot
+
+            wm_ref[row, col, :] = jnp.where(write & onehot, bw + wv, bw)
+            fps_ref[row, col, :] = jnp.where(ins, fs, bfs)
+            fpd_ref[row, col, :] = jnp.where(ins, fd, bfd)
+            tm_ref[row, col, :] = jnp.where(ins, tv, bt)
+            idx_ref[row, col, :] = jnp.where(ins, jnp.uint32(k), bidx)
+            return done | write
+
+        done = jax.lax.fori_loop(0, r * r, probe_body, ~is_valid)
+        spill_ref[e] = jnp.where(is_valid & ~done, 1, 0).astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, n, edge_body, 0)
+
+
+def leaf_insert_pallas(node: NodeState, fs, fd, rows, cols, w, t, valid,
+                       *, r: int, interpret: bool = True):
+    """Run the faithful sequential insert kernel.
+
+    Returns (NodeState', spill mask (n,) int32).
+    """
+    n = fs.shape[0]
+    d, _, b = node.fp_s.shape
+    valid_i = jnp.asarray(valid, jnp.int32)
+    out_shapes = (
+        jax.ShapeDtypeStruct(node.fp_s.shape, jnp.uint32),
+        jax.ShapeDtypeStruct(node.fp_d.shape, jnp.uint32),
+        jax.ShapeDtypeStruct(node.w.shape, jnp.float32),
+        jax.ShapeDtypeStruct(node.t.shape, jnp.uint32),
+        jax.ShapeDtypeStruct(node.idx.shape, jnp.uint32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+    )
+    kernel = functools.partial(_kernel, r=r, n=n)
+    # whole-array blocks (default BlockSpecs): matrix + chunk live in VMEM
+    fn = pl.pallas_call(
+        kernel,
+        out_shape=out_shapes,
+        input_output_aliases={7: 0, 8: 1, 9: 2, 10: 3, 11: 4},
+        interpret=interpret,
+    )
+    fps, fpd, wm, tm, idxm, spill = fn(
+        jnp.asarray(fs, jnp.uint32), jnp.asarray(fd, jnp.uint32),
+        jnp.asarray(rows, jnp.int32), jnp.asarray(cols, jnp.int32),
+        jnp.asarray(w, jnp.float32), jnp.asarray(t, jnp.uint32), valid_i,
+        node.fp_s, node.fp_d, node.w, node.t, node.idx)
+    return NodeState(fps, fpd, wm, tm, idxm), spill

@@ -1,0 +1,54 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU backends (this container) and False
+on TPU, where the kernels compile to Mosaic.  The probe kernels tile
+(matrix, row-tile) blocks through VMEM; for very large upper-level
+matrices (d >= 1024) callers should keep the query batch q modest
+(<= 128) so the (q, tr, d, b) compare tile stays within VMEM/VREG budget —
+the benchmark harness and HiggsSketch respect this.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.core.cmatrix import NodeState
+from repro.kernels import leaf_insert as _li
+from repro.kernels import probe as _pr
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("r", "interpret"))
+def leaf_insert(node: NodeState, fs, fd, rows, cols, w, t, valid, *,
+                r: int, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _li.leaf_insert_pallas(node, fs, fd, rows, cols, w, t, valid,
+                                  r=r, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("match_time", "interpret"))
+def edge_probe(nodes: NodeState, node_mask, fs, fd, rows, cols, ts, te, *,
+               match_time: bool, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _pr.edge_probe_pallas(nodes, node_mask, fs, fd, rows, cols,
+                                 ts, te, match_time=match_time,
+                                 interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("direction", "match_time", "interpret"))
+def vertex_probe(nodes: NodeState, node_mask, fv, rows, ts, te, *,
+                 direction: str, match_time: bool,
+                 interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _pr.vertex_probe_pallas(nodes, node_mask, fv, rows, ts, te,
+                                   direction=direction,
+                                   match_time=match_time,
+                                   interpret=interpret)

@@ -1,0 +1,163 @@
+"""Pallas TPU kernels: batched edge / vertex probes over stacked matrices.
+
+TPU adaptation (DESIGN.md §3): arbitrary per-query gathers are hostile to
+the TPU vector unit, so the probe is reformulated *gather-free* — each
+grid step streams one (matrix, row-tile) block through VMEM and compares
+every bucket against every query, restricting positions with one-hot
+row/column candidate masks built from an iota.  FLOPs go up by ~d/r on the
+VPU, HBM traffic is a single stream over the matrix pool (the actual
+bottleneck), and the access pattern is fully sequential.
+
+Grid: (m, d / TR).  Outputs are accumulated across grid steps into the
+same (q,) block (index_map constant in both grid axes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.cmatrix import NodeState
+
+
+def _edge_kernel(mask_ref, fs_ref, fd_ref, rows_ref, cols_ref, ts_ref,
+                 te_ref, mfs_ref, mfd_ref, mw_ref, mt_ref, out_ref,
+                 *, match_time: bool, tr: int):
+    mi = pl.program_id(0)
+    ti = pl.program_id(1)
+
+    @pl.when((mi == 0) & (ti == 0))
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    mfs = mfs_ref[0]                       # (tr, d, b)
+    mfd = mfd_ref[0]
+    mw = mw_ref[0]
+    tr_, d, b = mfs.shape
+    node_ok = mask_ref[mi] != 0
+
+    rows = rows_ref[...]                   # (q, r)
+    cols = cols_ref[...]
+    q, r = rows.shape
+    # one-hot candidate masks; rows are global indices, this block covers
+    # [ti*tr, ti*tr + tr)
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (q, r, tr), 2) + ti * tr
+    row_mask = jnp.any(rows[:, :, None] == row_iota, axis=1)   # (q, tr)
+    col_iota = jax.lax.broadcasted_iota(jnp.int32, (q, r, d), 2)
+    col_mask = jnp.any(cols[:, :, None] == col_iota, axis=1)   # (q, d)
+
+    fs = fs_ref[...]
+    fd = fd_ref[...]
+    match = (mfs[None] == fs[:, None, None, None]) & \
+        (mfd[None] == fd[:, None, None, None])                 # (q,tr,d,b)
+    if match_time:
+        mt = mt_ref[0]
+        match &= (mt[None] >= ts_ref[...][:, None, None, None]) & \
+            (mt[None] <= te_ref[...][:, None, None, None])
+    pos = row_mask[:, :, None, None] & col_mask[:, None, :, None]
+    contrib = jnp.where(match & pos & node_ok, mw[None], 0.0)
+    out_ref[...] += contrib.sum(axis=(1, 2, 3))
+
+
+def _vertex_kernel(mask_ref, fv_ref, rows_ref, ts_ref, te_ref,
+                   mfp_ref, mw_ref, mt_ref, out_ref,
+                   *, match_time: bool, tr: int, direction: str):
+    mi = pl.program_id(0)
+    ti = pl.program_id(1)
+
+    @pl.when((mi == 0) & (ti == 0))
+    def _init():
+        out_ref[...] = jnp.zeros(out_ref.shape, out_ref.dtype)
+
+    mfp = mfp_ref[0]                       # (tr, d, b) fp_s or fp_d
+    mw = mw_ref[0]
+    tr_, d, b = mfp.shape
+    node_ok = mask_ref[mi] != 0
+
+    rows = rows_ref[...]                   # (q, r) candidate rows/cols
+    q, r = rows.shape
+    if direction == "out":
+        # candidates restrict the first matrix axis (tiled)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (q, r, tr), 2) + ti * tr
+        pos = jnp.any(rows[:, :, None] == iota, axis=1)        # (q, tr)
+        pos = pos[:, :, None, None]
+    else:
+        # candidates restrict the second (column) axis (not tiled)
+        iota = jax.lax.broadcasted_iota(jnp.int32, (q, r, d), 2)
+        pos = jnp.any(rows[:, :, None] == iota, axis=1)        # (q, d)
+        pos = pos[:, None, :, None]
+
+    fv = fv_ref[...]
+    match = mfp[None] == fv[:, None, None, None]
+    if match_time:
+        mt = mt_ref[0]
+        match &= (mt[None] >= ts_ref[...][:, None, None, None]) & \
+            (mt[None] <= te_ref[...][:, None, None, None])
+    contrib = jnp.where(match & pos & node_ok, mw[None], 0.0)
+    out_ref[...] += contrib.sum(axis=(1, 2, 3))
+
+
+def _row_tile(d: int) -> int:
+    return min(d, max(8, 512 // max(d // 8, 1)))
+
+
+def edge_probe_pallas(nodes: NodeState, node_mask, fs, fd, rows, cols,
+                      ts, te, *, match_time: bool, interpret: bool = True):
+    """(q,) sums of matching entry weights; Pallas twin of
+    :func:`repro.core.cmatrix.probe_edge`."""
+    m, d, _, b = nodes.fp_s.shape
+    q, r = rows.shape
+    tr = _row_tile(d)
+    grid = (m, d // tr)
+    qspec = pl.BlockSpec((q,), lambda mi, ti: (0,))
+    q2spec = pl.BlockSpec((q, r), lambda mi, ti: (0, 0))
+    mspec = pl.BlockSpec((1, tr, d, b), lambda mi, ti: (mi, ti, 0, 0))
+    maskspec = pl.BlockSpec((m,), lambda mi, ti: (0,))
+    kernel = functools.partial(_edge_kernel, match_time=match_time, tr=tr)
+    ts = jnp.broadcast_to(jnp.asarray(ts, jnp.uint32), (q,))
+    te = jnp.broadcast_to(jnp.asarray(te, jnp.uint32), (q,))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[maskspec, qspec, qspec, q2spec, q2spec, qspec, qspec,
+                  mspec, mspec, mspec, mspec],
+        out_specs=pl.BlockSpec((q,), lambda mi, ti: (0,)),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(node_mask, jnp.int32), jnp.asarray(fs, jnp.uint32),
+      jnp.asarray(fd, jnp.uint32), jnp.asarray(rows, jnp.int32),
+      jnp.asarray(cols, jnp.int32), ts, te,
+      nodes.fp_s, nodes.fp_d, nodes.w, nodes.t)
+
+
+def vertex_probe_pallas(nodes: NodeState, node_mask, fv, rows, ts, te, *,
+                        direction: str, match_time: bool,
+                        interpret: bool = True):
+    """(q,) sums for vertex queries; Pallas twin of
+    :func:`repro.core.cmatrix.probe_vertex`."""
+    m, d, _, b = nodes.fp_s.shape
+    q, r = rows.shape
+    tr = _row_tile(d)
+    grid = (m, d // tr)
+    qspec = pl.BlockSpec((q,), lambda mi, ti: (0,))
+    q2spec = pl.BlockSpec((q, r), lambda mi, ti: (0, 0))
+    mspec = pl.BlockSpec((1, tr, d, b), lambda mi, ti: (mi, ti, 0, 0))
+    maskspec = pl.BlockSpec((m,), lambda mi, ti: (0,))
+    kernel = functools.partial(_vertex_kernel, match_time=match_time,
+                               tr=tr, direction=direction)
+    ts = jnp.broadcast_to(jnp.asarray(ts, jnp.uint32), (q,))
+    te = jnp.broadcast_to(jnp.asarray(te, jnp.uint32), (q,))
+    fp = nodes.fp_s if direction == "out" else nodes.fp_d
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[maskspec, qspec, q2spec, qspec, qspec,
+                  mspec, mspec, mspec],
+        out_specs=pl.BlockSpec((q,), lambda mi, ti: (0,)),
+        out_shape=jax.ShapeDtypeStruct((q,), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(node_mask, jnp.int32), jnp.asarray(fv, jnp.uint32),
+      jnp.asarray(rows, jnp.int32), ts, te,
+      fp, nodes.w, nodes.t)

@@ -1,0 +1,279 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh, prove memory fit, and extract the roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+
+Each invocation runs ONE cell in a fresh process (jax locks the device
+count at first init) and writes a JSON record with:
+  memory_analysis (bytes/device), cost_analysis (flops/bytes),
+  collective bytes parsed from the optimized HLO (scan-body collectives
+  scaled by the known trip count), and the analytic model-FLOPs terms.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+
+
+def parse_collectives(hlo: str, group_trip_count: int):
+    """Sum operand bytes of collective ops in optimized HLO.
+
+    Collectives inside while-loop bodies appear once but execute
+    trip-count times; XLA names scan computations ``while_body_*`` (the
+    layer scan dominates).  We attribute any collective inside a region
+    whose name contains 'while' to the scan and scale by the trip count.
+    Returns dict kind -> bytes (already scaled).
+    """
+    dtype_bytes = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4,
+                   "u32": 4, "s64": 8, "u64": 8, "s16": 2, "u16": 2,
+                   "s8": 1, "u8": 1, "pred": 1, "f8e4m3": 1, "f8e5m2": 1}
+    out = {}
+    region = None
+    in_while = False
+    for line in hlo.splitlines():
+        m = re.match(r"\s*%?(\S+)\s*\([^)]*\)\s*->", line)
+        if line and not line[0].isspace():
+            mm = re.search(r"^(?:ENTRY\s+)?%?([\w.\-]+)", line)
+            if mm:
+                region = mm.group(1)
+                in_while = "while" in region.lower() or \
+                    "body" in region.lower() or "cond" in region.lower()
+        m = re.search(
+            r"=\s*(?:\([^=]*\)\s*)?((?:[a-z0-9]+)\[[^\]]*\][^ ]*)\s*"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)", line)
+        if not m:
+            continue
+        shape_s, kind = m.group(1), m.group(2)
+        nbytes = 0
+        for sh in re.finditer(r"([a-z0-9]+)\[([0-9,]*)\]", shape_s):
+            dt, dims = sh.group(1), sh.group(2)
+            if dt not in dtype_bytes:
+                continue
+            cnt = 1
+            for d in dims.split(","):
+                if d:
+                    cnt *= int(d)
+            nbytes += cnt * dtype_bytes[dt]
+        scale = group_trip_count if in_while else 1
+        out[kind] = out.get(kind, 0) + nbytes * scale
+    return out
+
+
+def analytic_flops(cfg, shape_info, kind: str) -> float:
+    """MODEL_FLOPS: 6*N*D for dense training, 2*N*D for inference fwd,
+    with N = active params (MoE counts top-k experts only)."""
+    D, F, V, L = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_layers
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    kinds = cfg.layer_kinds
+    n_active = 0
+    for k in kinds:
+        if k in ("attn", "swa", "local"):
+            n_active += D * H * Dh + 2 * D * Hkv * Dh + H * Dh * D
+        elif k == "rglru":
+            W = cfg.lru_width or D
+            n_active += 2 * D * W + 2 * W * W + W * D
+        elif k == "mamba":
+            Din = cfg.mamba_d_inner or 2 * D
+            n_active += D * 2 * Din + Din * D + \
+                Din * (2 * cfg.ssm_state + D // 16)
+        if k != "mamba":
+            if cfg.moe:
+                n_active += D * cfg.n_experts + \
+                    cfg.moe_top_k * 3 * D * F
+            else:
+                n_active += 3 * D * F
+    n_active += 2 * V * D if not cfg.tie_embeddings else V * D
+    seq, batch = shape_info["seq"], shape_info["batch"]
+    tokens = batch * (seq if kind != "decode" else 1)
+    mult = 6 if kind == "train" else 2
+    flops = mult * n_active * tokens
+    # attention score/value flops (context-dependent)
+    ctx = seq
+    for k in kinds:
+        if k in ("swa", "local"):
+            eff = min(cfg.local_window, ctx)
+        elif k == "attn":
+            eff = ctx
+        else:
+            continue
+        if kind == "decode":
+            flops += mult / 3 * 2 * 2 * batch * H * Dh * eff
+        else:
+            flops += mult / 3 * 2 * 2 * batch * H * Dh * eff * seq / 2
+    return flops
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-compile", action="store_true",
+                    help="lower only (debug)")
+    ap.add_argument("--microbatches", type=int, default=0,
+                    help="grad-accumulation microbatches (0 = auto)")
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="disable FSDP parameter sharding (pure TP+DP)")
+    ap.add_argument("--opt", default="",
+                    help="comma list of §Perf levers: bf16norms,"
+                         "rematflash,bf16grads")
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import configs as cfglib
+    from repro.launch import specs as specs_lib
+    from repro.launch.mesh import make_production_mesh, shard_cfg_for
+    from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                    make_train_step)
+    from repro.models import transformer as tfm
+    from repro.optim import AdamW
+
+    if not cfglib.shape_applicable(args.arch, args.shape):
+        print(f"SKIP {args.arch} x {args.shape}: long_500k not applicable "
+              "(pure full attention; see DESIGN.md §5)")
+        record = {"arch": args.arch, "shape": args.shape,
+                  "mesh": "multipod" if args.multi_pod else "pod",
+                  "status": "skipped_na"}
+        _write(args, record)
+        return 0
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    scfg = shard_cfg_for(mesh)
+    if args.no_fsdp:
+        import dataclasses as _dc
+        scfg = _dc.replace(scfg, fsdp=None)
+    cfg, inputs, in_specs, kind = specs_lib.input_specs(
+        args.arch, args.shape, mesh)
+    tp_size = mesh.shape["model"]
+
+    opts = {o for o in args.opt.split(",") if o}
+    if opts - {"bf16norms", "rematflash", "bf16grads", "bf16params"}:
+        raise SystemExit(f"unknown --opt: {opts}")
+    cfg = dataclasses.replace(
+        cfg,
+        perf_bf16_norms="bf16norms" in opts,
+        perf_remat_flash="rematflash" in opts)
+    grad_dtype = jnp.bfloat16 if "bf16grads" in opts else jnp.float32
+
+    # auto microbatching: target <= ~8k tokens per device per microbatch
+    info = cfglib.SHAPES[args.shape]
+    mb = args.microbatches
+    if kind == "train" and mb == 0:
+        import numpy as np
+        from repro.launch.mesh import dp_axes
+        dp_total = int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+        tok_per_dev = info["batch"] * info["seq"] // dp_total
+        mb = max(1, tok_per_dev // 8192)
+        while info["batch"] % (mb * dp_total) and mb > 1:
+            mb -= 1
+    record_mb = mb if kind == "train" else 1
+
+    params_shapes = jax.eval_shape(
+        lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
+    pspec = tfm.params_pspec(cfg, scfg, tp_size)
+    psharding = specs_lib.named(mesh, pspec)
+
+    t0 = time.time()
+    if kind == "train":
+        opt = AdamW()
+        opt_shapes = jax.eval_shape(lambda p: opt.init(p), params_shapes)
+        ospec = opt.state_pspec(pspec)
+        osharding = specs_lib.named(mesh, ospec)
+        step = make_train_step(cfg, scfg, mesh, opt, num_microbatches=mb,
+                               grad_dtype=grad_dtype,
+                               bf16_params="bf16params" in opts)
+        jitted = jax.jit(
+            step,
+            in_shardings=(psharding, osharding,
+                          specs_lib.named(mesh, in_specs)),
+            out_shardings=(psharding, osharding, None),
+            donate_argnums=(0, 1))
+        lowered = jitted.lower(params_shapes, opt_shapes, inputs)
+    elif kind == "prefill":
+        step = make_prefill_step(cfg, scfg, mesh)
+        jitted = jax.jit(step, in_shardings=(psharding,
+                                             specs_lib.named(mesh, in_specs)))
+        lowered = jitted.lower(params_shapes, inputs)
+    else:
+        step = make_decode_step(cfg, scfg, mesh)
+        cache_sharding = specs_lib.named(mesh, in_specs["cache"])
+        jitted = jax.jit(
+            step,
+            in_shardings=(psharding,
+                          {"token": specs_lib.named(mesh, in_specs["token"]),
+                           "cache": cache_sharding,
+                           "cache_len": NamedSharding(mesh, P())}),
+            out_shardings=(None, cache_sharding),
+            donate_argnums=(1,))     # donate the KV cache (in-place update)
+        lowered = jitted.lower(params_shapes, inputs)
+    t_lower = time.time() - t0
+
+    record = {
+        "arch": args.arch, "shape": args.shape,
+        "mesh": "multipod" if args.multi_pod else "pod",
+        "kind": kind, "lower_s": round(t_lower, 1),
+        "microbatches": record_mb, "fsdp": not args.no_fsdp,
+        "opt": sorted(opts), "status": "lowered",
+    }
+    if not args.skip_compile:
+        t0 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t0, 1)
+        mem = compiled.memory_analysis()
+        record["memory"] = {
+            k: int(getattr(mem, k, 0)) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes",
+             "alias_size_in_bytes")}
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        record["cost"] = {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float)) and
+                          k in ("flops", "bytes accessed", "transcendentals",
+                                "utilization operand")}
+        hlo = compiled.as_text()
+        from repro.launch import hlo_analysis
+        struct = hlo_analysis.analyze(hlo)
+        record["hlo_flops"] = struct["flops"]
+        record["hlo_bytes_accessed"] = struct["bytes"]
+        record["collectives"] = struct["collectives"]
+        record["roofline"] = hlo_analysis.roofline_terms(struct)
+        record["hlo_bytes"] = len(hlo)
+        record["status"] = "compiled"
+
+    record["analytic_flops"] = analytic_flops(
+        cfg, cfglib.SHAPES[args.shape], kind)
+    record["n_devices"] = mesh.size
+    _write(args, record)
+    print(json.dumps({k: v for k, v in record.items()
+                      if k not in ("memory", "cost", "collectives")}))
+    print("memory:", record.get("memory"))
+    print("cost:", record.get("cost"))
+    print("collectives:", record.get("collectives"))
+    return 0
+
+
+def _write(args, record):
+    os.makedirs(args.out, exist_ok=True)
+    mesh_tag = "multipod" if args.multi_pod else "pod"
+    path = os.path.join(args.out,
+                        f"{args.arch}_{args.shape}_{mesh_tag}.json")
+    with open(path, "w") as fh:
+        json.dump(record, fh, indent=1)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,271 @@
+"""Structural cost model over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` on the CPU backend does NOT scale
+while-loop body costs by trip count, so a scanned-layers model under-
+reports FLOPs by ~n_layers.  This parser rebuilds the per-computation
+call graph (entry -> fusions/calls/whiles), extracts loop trip counts
+from the while-condition compare constants, builds a symbol table of
+operand shapes (optimized HLO does not inline operand shapes), and
+aggregates:
+
+* ``flops``     — 2 * prod(output dims) * prod(contracting dims) for
+                  every dot (convolutions are lowered to shifts/muls in
+                  this codebase);
+* ``bytes``     — operand + output bytes of top-level ops (an HBM-traffic
+                  proxy: every buffer is written once by its producer and
+                  read once per consumer);
+* ``collectives`` — operand bytes per collective kind.
+
+All three are per-device numbers (SPMD HLO is per-partition).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTB = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+        "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+        "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _dims_prod(dims) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _shape_list(text: str):
+    """All (dtype, dims) shapes inlined in a chunk of text."""
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group(1)
+        if dt not in _DTB:
+            continue
+        out.append((dt, [int(d) for d in m.group(2).split(",") if d]))
+    return out
+
+
+def _shapes_bytes(shapes) -> int:
+    return sum(_dims_prod(d) * _DTB[dt] for dt, d in shapes)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    lines: list
+    calls: list          # callee names (fusion kCall/kLoop, to_apply)
+    whiles: list         # (body name, cond name)
+    symbols: dict        # var name -> (dtype, dims)
+
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-~]+)\s*=\s*(.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-~]+)")
+
+
+def _parse_computations(hlo: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur = None
+    for raw in hlo.splitlines():
+        if raw and not raw[0].isspace() and ("{" in raw):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w.\-~]+)", raw.strip())
+            if m:
+                cur = Computation(m.group(1), [], [], [], {})
+                comps[cur.name] = cur
+                if raw.strip().startswith("ENTRY"):
+                    comps["__entry__"] = cur
+            continue
+        if cur is None:
+            continue
+        line = raw.strip()
+        if not line or line == "}":
+            continue
+        cur.lines.append(line)
+        dm = _DEF_RE.match(line)
+        if dm:
+            sh = _shape_list(dm.group(2).split(" ", 1)[0] + " " +
+                             dm.group(2))
+            if sh:
+                cur.symbols[dm.group(1)] = sh[0]
+        for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-~]+)", line):
+            cur.calls.append(m.group(1))
+        if "while(" in line:
+            mc = re.search(r"condition=%?([\w.\-~]+)", line)
+            mb = re.search(r"body=%?([\w.\-~]+)", line)
+            if mc and mb:
+                cur.whiles.append((mb.group(1), mc.group(1)))
+    # computation parameter shapes are declared in headers; fall back to a
+    # global symbol table for cross-computation references
+    glob = {}
+    for c in comps.values():
+        glob.update(c.symbols)
+    for c in comps.values():
+        c.symbols = {**glob, **c.symbols}
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Extract the loop bound from compare-with-constant conditions."""
+    consts = {}
+    for line in cond.lines:
+        m = re.match(
+            r"(?:ROOT\s+)?%?([\w.\-~]+)\s*=\s*s(?:32|64)\[\]\s*"
+            r"constant\((\d+)\)", line)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for line in cond.lines:
+        if "compare(" not in line:
+            continue
+        args = _OPERAND_RE.findall(line.split("compare(", 1)[1])
+        for a in args:
+            if a in consts:
+                return consts[a]
+    # conditions may delegate to a fused compare; look for constants in
+    # the whole computation as a fallback
+    if len(consts) == 1:
+        return next(iter(consts.values()))
+    return 1
+
+
+# ops whose outputs/operands do NOT stream HBM (metadata / aliasing)
+_SKIP_BYTES = ("get-tuple-element(", "tuple(", "parameter(", "constant(",
+               "bitcast(", "reshape(", "while(", "conditional(",
+               "after-all(", "iota(", "partition-id(", "replica-id(")
+
+
+def analyze(hlo: str) -> dict:
+    comps = _parse_computations(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {}}
+
+    memo: dict[str, tuple] = {}
+
+    def line_operand_bytes(c: Computation, line: str) -> int:
+        body = line.split("=", 1)[-1]
+        inside = body.split("(", 1)[-1]
+        # strip attribute tail so metadata refs don't count
+        inside = inside.split("), ")[0]
+        total = 0
+        for name in _OPERAND_RE.findall(inside):
+            sh = c.symbols.get(name)
+            if sh:
+                total += _dims_prod(sh[1]) * _DTB[sh[0]]
+        return total
+
+    def dot_flops(c: Computation, line: str) -> float:
+        dm = _DEF_RE.match(line)
+        if not dm:
+            return 0.0
+        out_sh = _shape_list(dm.group(2))
+        if not out_sh:
+            return 0.0
+        out = _dims_prod(out_sh[0][1])
+        inside = line.split("dot(", 1)[1]
+        lhs_names = _OPERAND_RE.findall(inside)
+        k = 1
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+        if m and lhs_names:
+            lhs_sh = c.symbols.get(lhs_names[0])
+            if lhs_sh:
+                for idx in m.group(1).split(","):
+                    if idx and int(idx) < len(lhs_sh[1]):
+                        k *= lhs_sh[1][int(idx)]
+        return 2.0 * out * k
+
+    def comp_cost(name: str, stack=()):
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return (0.0, 0.0, {})
+        c = comps[name]
+        flops = 0.0
+        nbytes = 0.0
+        colls: dict[str, float] = defaultdict(float)
+        for line in c.lines:
+            body = line.split("=", 1)[-1]
+            if " dot(" in body or body.lstrip().startswith("dot("):
+                flops += dot_flops(c, line)
+            is_coll = False
+            for kind in _COLLECTIVES:
+                if f" {kind}(" in body or \
+                        body.lstrip().startswith(kind + "("):
+                    colls[kind] += line_operand_bytes(c, line)
+                    is_coll = True
+                    break
+            if is_coll:
+                continue
+            if any(op in body for op in _SKIP_BYTES):
+                continue
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            out_sh = _shape_list(dm.group(2))
+            out_b = _dims_prod(out_sh[0][1]) * _DTB[out_sh[0][0]] \
+                if out_sh else 0
+            # slicing ops alias their big operand: traffic is the slice,
+            # not the buffer (XLA in-place DUS inside loops).  Fusions are
+            # named after their root op, so match the pre-metadata text.
+            head = line.split(", metadata")[0]
+            if "dynamic-update-slice" in head:
+                # update operand: the largest operand smaller than output
+                ops = _OPERAND_RE.findall(body.split("(", 1)[-1])
+                cand = [
+                    _dims_prod(s[1]) * _DTB[s[0]]
+                    for nm in ops
+                    if (s := c.symbols.get(nm)) is not None
+                    and _dims_prod(s[1]) * _DTB[s[0]] < out_b]
+                nbytes += 2 * (max(cand) if cand else out_b)
+            elif "dynamic-slice" in head or "gather(" in body or \
+                    body.lstrip().startswith("slice(") or \
+                    re.search(r"=\s*\S+\s+slice\(", head):
+                nbytes += 2 * out_b
+            elif "scatter(" in body:
+                ops = _OPERAND_RE.findall(body.split("(", 1)[-1])
+                upd = c.symbols.get(ops[-1]) if ops else None
+                upd_b = _dims_prod(upd[1]) * _DTB[upd[0]] if upd else out_b
+                nbytes += 2 * upd_b
+            else:
+                nbytes += out_b + line_operand_bytes(c, line)
+        # fusions/calls: their dots count as flops; their internal buffers
+        # live in registers, so bytes come from the call line (above)
+        for callee in c.calls:
+            f2, _, c2 = comp_cost(callee, stack + (name,))
+            flops += f2
+            for k, v in c2.items():
+                colls[k] += v
+        for body_name, cond_name in c.whiles:
+            trips = _trip_count(comps[cond_name]) \
+                if cond_name in comps else 1
+            f2, b2, c2 = comp_cost(body_name, stack + (name,))
+            flops += f2 * trips
+            nbytes += b2 * trips
+            for k, v in c2.items():
+                colls[k] += v * trips
+        memo[name] = (flops, nbytes, dict(colls))
+        return memo[name]
+
+    flops, nbytes, colls = comp_cost(entry.name)
+    return {"flops": flops, "bytes": nbytes, "collectives": colls}
+
+
+def roofline_terms(analysis: dict, *, chips: int = 1,
+                   peak_flops: float = 197e12, hbm_bw: float = 819e9,
+                   ici_bw: float = 50e9, ici_links: int = 4) -> dict:
+    """Three roofline terms in seconds.  HLO numbers are per-chip (SPMD
+    per-partition module); hardware: TPU v5e-like 197 TF/s bf16, 819 GB/s
+    HBM, ~50 GB/s/link ICI."""
+    coll_bytes = sum(analysis["collectives"].values())
+    return {
+        "compute_s": analysis["flops"] / peak_flops,
+        "memory_s": analysis["bytes"] / hbm_bw,
+        "collective_s": coll_bytes / (ici_bw * ici_links),
+        "collective_bytes": coll_bytes,
+        "flops": analysis["flops"],
+        "bytes": analysis["bytes"],
+    }

@@ -1,0 +1,29 @@
+"""Production meshes.  Functions, not module-level constants — importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    types = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
+
+
+def make_local_mesh():
+    """Single-device mesh with the production axis names (CPU smoke)."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def dp_axes(mesh) -> tuple:
+    """Batch-sharding axes for a mesh (('pod','data') multi-pod)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def shard_cfg_for(mesh):
+    from repro.models.common import ShardCfg
+    return ShardCfg(dp=dp_axes(mesh), tp="model", fsdp="data")

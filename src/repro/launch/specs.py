@@ -1,0 +1,122 @@
+"""ShapeDtypeStruct input stand-ins + sharding specs for every
+(arch x shape) cell — the dry-run lowers against these (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as cfglib
+from repro.launch.mesh import dp_axes, shard_cfg_for
+from repro.models import transformer as tfm
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_axis_ok(mesh, batch: int) -> bool:
+    total = int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+    return batch % total == 0
+
+
+def input_specs(arch: str, shape: str, mesh):
+    """Returns (cfg, inputs dict of ShapeDtypeStruct, in_specs dict of
+    PartitionSpec, step kind)."""
+    cfg = cfglib.get_config(arch)
+    info = cfglib.SHAPES[shape]
+    seq, batch, kind = info["seq"], info["batch"], info["kind"]
+    scfg = shard_cfg_for(mesh)
+    dp = scfg.dp if batch_axis_ok(mesh, batch) else None
+    bspec = P(dp, None)
+
+    if kind == "train":
+        cfg = dataclasses.replace(cfg, max_seq=seq)
+        inputs = {"tokens": sds((batch, seq), jnp.int32),
+                  "labels": sds((batch, seq), jnp.int32)}
+        specs = {"tokens": bspec, "labels": bspec}
+        if cfg.prefix_len:
+            inputs["prefix_embeds"] = sds(
+                (batch, cfg.prefix_len, cfg.d_model), jnp.bfloat16)
+            specs["prefix_embeds"] = P(dp, None, None)
+        return cfg, inputs, specs, kind
+
+    if kind == "prefill":
+        cfg = dataclasses.replace(cfg, max_seq=seq)
+        inputs = {"tokens": sds((batch, seq), jnp.int32)}
+        specs = {"tokens": bspec}
+        if cfg.prefix_len:
+            inputs["prefix_embeds"] = sds(
+                (batch, cfg.prefix_len, cfg.d_model), jnp.bfloat16)
+            specs["prefix_embeds"] = P(dp, None, None)
+        return cfg, inputs, specs, kind
+
+    # decode: one new token against a seq-length cache
+    cfg = dataclasses.replace(cfg, max_seq=seq + 1)
+    cache = jax.eval_shape(
+        lambda: tfm.init_decode_cache(cfg, batch, seq))
+    cache_specs = decode_cache_pspec(cfg, scfg, mesh, batch, seq)
+    inputs = {"token": sds((batch, 1), jnp.int32),
+              "cache": cache,
+              "cache_len": sds((), jnp.int32)}
+    specs = {"token": bspec, "cache": cache_specs, "cache_len": P()}
+    return cfg, inputs, specs, kind
+
+
+def decode_cache_pspec(cfg, scfg, mesh, batch: int, seq: int):
+    """KV cache sharding for decode.
+
+    * kv heads divide tp  -> shard heads over 'model' (no softmax comms);
+    * otherwise           -> shard the cache *sequence* over 'model'
+      (decode attention contracts seq, GSPMD turns softmax over the
+      sharded dim into tiny stat psums);
+    * batch=1 (long_500k) -> no dp on batch; seq shards over
+      ('data','model') so all 256 chips hold cache.
+    """
+    tp_size = mesh.shape[scfg.tp]
+    dp_ok = batch_axis_ok(mesh, batch)
+    dp = scfg.dp if dp_ok else None
+    kv_heads_ok = cfg.n_kv_heads % tp_size == 0
+
+    def kind_spec(kind, stacked):
+        lead = (None,) if stacked else ()
+        if kind in ("attn", "swa", "local"):
+            cache_seq = min(seq, cfg.local_window) \
+                if kind in ("swa", "local") else seq
+            if kv_heads_ok and dp_ok:
+                s = P(*lead, dp, None, scfg.tp, None)
+            else:
+                seq_axes = (scfg.tp,) if dp_ok else ("data", scfg.tp)
+                tot = int(np.prod([mesh.shape[a] for a in seq_axes]))
+                sa = seq_axes if cache_seq % tot == 0 else \
+                    ((scfg.tp,) if cache_seq % tp_size == 0 else None)
+                s = P(*lead, dp, sa, None, None)
+            return {"k": s, "v": s}
+        if kind == "rglru":
+            return {"conv": P(*lead, dp, None, scfg.tp),
+                    "lru": P(*lead, dp, scfg.tp)}
+        if kind == "mamba":
+            return {"conv": P(*lead, dp, None, scfg.tp),
+                    "ssm": P(*lead, dp, scfg.tp, None)}
+        raise ValueError(kind)
+
+    plen = len(cfg.pattern)
+    spec = {"groups": {}, "rem": []}
+    for pi in range(plen):
+        if cfg.n_groups:
+            spec["groups"][f"pat{pi}"] = kind_spec(cfg.pattern[pi], True)
+    kinds = cfg.layer_kinds
+    for i in range(cfg.n_rem):
+        spec["rem"].append(kind_spec(kinds[cfg.n_groups * plen + i], False))
+    return spec
+
+
+def named(mesh, tree):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree, is_leaf=lambda s: isinstance(s, P))

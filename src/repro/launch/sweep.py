@@ -1,0 +1,87 @@
+"""Run the dry-run over every (arch x shape x mesh) cell in subprocesses
+(one per cell — jax pins the device count at first init).
+
+Usage: PYTHONPATH=src python -m repro.launch.sweep [--workers 3]
+                                                   [--mesh pod|multipod|both]
+Writes per-cell JSON under experiments/dryrun/ and a summary CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import concurrent.futures as cf
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "pixtral-12b", "qwen1.5-32b", "minitron-8b", "llama3-8b", "gemma3-4b",
+    "mixtral-8x7b", "qwen3-moe-30b-a3b", "recurrentgemma-9b",
+    "musicgen-large", "falcon-mamba-7b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def run_cell(arch, shape, multipod, out, force=False):
+    tag = "multipod" if multipod else "pod"
+    path = os.path.join(out, f"{arch}_{shape}_{tag}.json")
+    if not force and os.path.exists(path):
+        with open(path) as fh:
+            rec = json.load(fh)
+        if rec.get("status") in ("compiled", "skipped_na"):
+            return arch, shape, tag, rec.get("status"), 0.0
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", out]
+    if multipod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ, PYTHONPATH="src")
+    t0 = time.time()
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=3600,
+                       env=env, cwd=os.getcwd())
+    dt = time.time() - t0
+    if r.returncode != 0:
+        err = (r.stderr or r.stdout).strip().splitlines()
+        with open(path.replace(".json", ".err"), "w") as fh:
+            fh.write("\n".join(err))
+        return arch, shape, tag, "FAILED", dt
+    status = "compiled"
+    if os.path.exists(path):
+        with open(path) as fh:
+            status = json.load(fh).get("status", "?")
+    return arch, shape, tag, status, dt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=3)
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+    cells = [(a, s, m) for a in ARCHS for s in SHAPES for m in meshes]
+    results = []
+    with cf.ThreadPoolExecutor(args.workers) as ex:
+        futs = {ex.submit(run_cell, a, s, m, args.out, args.force):
+                (a, s, m) for a, s, m in cells}
+        for fut in cf.as_completed(futs):
+            a, s, tag, status, dt = fut.result()
+            results.append((a, s, tag, status, dt))
+            print(f"[{len(results):3d}/{len(cells)}] {a:22s} {s:12s} "
+                  f"{tag:9s} {status:12s} {dt:6.1f}s", flush=True)
+
+    bad = [r for r in results if r[3] not in ("compiled", "skipped_na")]
+    print(f"\n{len(results) - len(bad)}/{len(results)} cells OK, "
+          f"{len(bad)} failed")
+    for a, s, tag, status, _ in bad:
+        print(f"  FAILED: {a} {s} {tag}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,6 @@
+from repro.models.transformer import (ModelConfig, init_params, forward_train,
+                                      forward_prefill, forward_decode,
+                                      init_decode_cache)
+
+__all__ = ["ModelConfig", "init_params", "forward_train", "forward_prefill",
+           "forward_decode", "init_decode_cache"]

@@ -1,0 +1,122 @@
+"""Attention: GQA with rotary embeddings, flash-style chunked softmax for
+train/prefill (bounded memory at 32k-500k context), plain cached attention
+for decode.  Causal, sliding-window, and local-attention masks.
+
+The chunked path is pure JAX (lax.scan over query blocks, inner scan over
+KV blocks, online softmax) — the natural place for a Pallas flash kernel
+on real hardware; the scan formulation already gives XLA the same tiling
+structure and keeps live buffers at (B, H, qb, kb).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _block_mask(q_pos, k_pos, window: int):
+    """(qb, kb) validity: causal, optionally within a sliding window."""
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def _divisor_block(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (prefix-extended sequences
+    like 4096+256 are not powers of two)."""
+    b = min(n, target)
+    while n % b:
+        b -= 1
+    return b
+
+
+def flash_attention(q, k, v, *, window: int = 0, q_block: int = 512,
+                    k_block: int = 1024, remat: bool = False):
+    """q: (B, Sq, H, Dh); k/v: (B, Skv, Hkv, Dh) with H % Hkv == 0.
+    Returns (B, Sq, H, Dh).  window=0 => full causal.
+
+    ``remat=True`` checkpoints each query-block: the backward pass
+    recomputes scores/probabilities instead of streaming the saved
+    (B, H, qb, kb) buffers from HBM (§Perf H5 — trades ~1 extra attention
+    forward for the dominant attention memory term)."""
+    B, Sq, H, Dh = q.shape
+    _, Skv, Hkv, _ = k.shape
+    rep = H // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    q_block = _divisor_block(Sq, q_block)
+    k_block = _divisor_block(Skv, k_block)
+    n_q, n_k = Sq // q_block, Skv // k_block
+    scale = Dh ** -0.5
+
+    qb = q.reshape(B, n_q, q_block, H, Dh).transpose(1, 0, 3, 2, 4)
+    kb = k.reshape(B, n_k, k_block, H, Dh).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, n_k, k_block, H, Dh).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_q):
+        qi, q_blk = qi_q                          # q_blk: (B, H, qb, Dh)
+        q_pos = qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, ki_kv):
+            acc, m_run, l_run = carry
+            ki, k_blk, v_blk = ki_kv
+            k_pos = ki * k_block + jnp.arange(k_block)
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _block_mask(q_pos, k_pos, window)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l_run * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            acc = acc * alpha[..., None] + pv
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, H, q_block, Dh), jnp.float32)
+        m0 = jnp.full((B, H, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_block), jnp.float32)
+        (acc, m_run, l_run), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.arange(n_k), kb, vb))
+        out = acc / jnp.maximum(l_run[..., None], 1e-30)
+        return None, out.astype(q.dtype)
+
+    if remat:
+        q_step = jax.checkpoint(q_step)
+    _, out = jax.lax.scan(q_step, None, (jnp.arange(n_q), qb))
+    # out: (n_q, B, H, qb, Dh) -> (B, Sq, H, Dh)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, Sq, H, Dh)
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
+    """Single-token attention against a cache.
+
+    q: (B, 1, H, Dh); k/v_cache: (B, S, Hkv, Dh); cache_len: scalar count of
+    valid cache positions (the new token's KV must already be written).
+    """
+    B, _, H, Dh = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    rep = H // Hkv
+    if rep > 1:
+        k_cache = jnp.repeat(k_cache, rep, axis=2)
+        v_cache = jnp.repeat(v_cache, rep, axis=2)
+    scale = Dh ** -0.5
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S)
+    valid = pos[None, None, None, :] < cache_len
+    if window > 0:
+        valid &= pos[None, None, None, :] >= (cache_len - window)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

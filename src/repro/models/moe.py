@@ -1,0 +1,150 @@
+"""Mixture-of-Experts FFN under shard_map.
+
+Two modes, chosen by divisibility (DESIGN.md §6):
+
+* **EP** (num_experts % tp == 0, e.g. qwen3 128e/16): expert weights are
+  sharded over the tp axis.  Because activations are *replicated* over tp
+  between Megatron blocks, dispatch is pure local filtering — each tp
+  shard processes the tokens routed to its resident experts and the
+  combine is the same psum(tp) a TP FFN needs anyway.  Proper expert
+  parallelism with zero extra collectives.
+* **TP** (e.g. mixtral 8e): every expert's d_ff is sharded over tp;
+  experts' weights are replicated across tp shards.  Same psum.
+
+Dispatch is sort-based with a capacity bound (capacity_factor * T*k/E
+per shard-local expert); overflow tokens fall back to their residual
+stream (standard capacity dropping).  Router: softmax top-k, probs
+renormalized over the selected experts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import ShardCfg
+
+
+def is_ep(cfg, tp_size: int = 16) -> bool:
+    return cfg.n_experts % tp_size == 0
+
+
+def moe_params_spec(cfg, scfg: ShardCfg, tp_size: int = 16):
+    """PartitionSpecs for stacked expert weights.
+
+    w_gate/w_up: (E, D, F); w_down: (E, F, D).  The fsdp axis shards D (or
+    the F side for w_down) and is all-gathered just-in-time inside the
+    shard_mapped block — explicit ZeRO-3."""
+    if is_ep(cfg, tp_size):       # EP: experts over tp, fsdp over D/F
+        return {"w_gate": P(scfg.tp, scfg.fsdp, None),
+                "w_up": P(scfg.tp, scfg.fsdp, None),
+                "w_down": P(scfg.tp, None, scfg.fsdp),
+                "router": P(None, None)}
+    return {"w_gate": P(None, scfg.fsdp, scfg.tp),
+            "w_up": P(None, scfg.fsdp, scfg.tp),
+            "w_down": P(None, scfg.tp, scfg.fsdp),
+            "router": P(None, None)}
+
+
+def _local_moe(x, router_w, w_gate, w_up, w_down, *, top_k: int,
+               n_experts_global: int, capacity_factor: float,
+               ep: bool, tp_size: int, tp_index):
+    """Per-shard MoE.  x: (T, D) local tokens (replicated over tp).
+    w_*: (E_loc, D, F_loc).  Returns the *partial* output (psum'd by
+    caller) and the router load for aux loss."""
+    T, D = x.shape
+    E_loc = w_gate.shape[0]
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E_glob)
+    top_p, top_e = jax.lax.top_k(probs, top_k)               # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # flatten (token, slot) pairs and keep those owned by this shard
+    flat_e = top_e.reshape(-1)                               # (T*k,)
+    flat_p = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T), top_k)
+    if ep:
+        e_lo = tp_index * E_loc
+        owned = (flat_e >= e_lo) & (flat_e < e_lo + E_loc)
+        local_e = jnp.where(owned, flat_e - e_lo, E_loc)     # E_loc = drop
+    else:
+        owned = jnp.ones_like(flat_e, dtype=bool)
+        local_e = flat_e
+
+    # per-expert capacity is the same in EP and TP modes: each shard holds
+    # E_loc experts, each expecting T*k/E_global (token, slot) pairs
+    capacity = max(1, int(capacity_factor * T * top_k /
+                          max(n_experts_global, 1)))
+
+    # rank within expert by arrival: stable sort on expert id
+    order = jnp.argsort(jnp.where(owned, local_e, E_loc), stable=True)
+    sorted_e = local_e[order]
+    pos = jnp.arange(flat_e.shape[0])
+    is_first = jnp.concatenate([jnp.ones((1,), bool),
+                                sorted_e[1:] != sorted_e[:-1]])
+    group_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_first, pos, 0))
+    rank_sorted = pos - group_start
+    rank = jnp.zeros_like(pos).at[order].set(rank_sorted)
+
+    keep = owned & (rank < capacity)
+    slot_e = jnp.where(keep, local_e, E_loc)                 # drop row
+    slot_c = jnp.where(keep, rank, 0)
+
+    # gather tokens into (E_loc+1, C, D) buffers (last row = drop bin)
+    buf = jnp.zeros((E_loc + 1, capacity, D), x.dtype)
+    buf = buf.at[slot_e, slot_c].add(jnp.where(keep[:, None],
+                                               x[flat_tok], 0))
+    h = jnp.einsum("ecd,edf->ecf", buf[:E_loc], w_gate.astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf[:E_loc], w_up.astype(x.dtype))
+    h = jax.nn.silu(h) * u
+    y = jnp.einsum("ecf,efd->ecd", h, w_down.astype(x.dtype))
+
+    # combine back, weighted by router prob
+    contrib = y[jnp.where(keep, slot_e, 0), slot_c] * \
+        jnp.where(keep, flat_p, 0.0)[:, None].astype(x.dtype)
+    out = jnp.zeros_like(x).at[flat_tok].add(contrib)
+    load = jnp.mean(probs, axis=0)                           # (E_glob,)
+    return out, load
+
+
+def moe_ffn(x, params, cfg, scfg: ShardCfg, mesh):
+    """x: (B, S, D) sharded P(dp, None, None).  Returns (out, router load)."""
+    import numpy as np
+    tp = scfg.tp
+    tp_size = mesh.shape[tp]
+    ep = is_ep(cfg, tp_size)
+    B, S, D = x.shape
+    dp_names = scfg.dp if isinstance(scfg.dp, tuple) else (scfg.dp,)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp_names]))
+    x_dp = scfg.dp if B % dp_total == 0 else None  # batch=1 decode: repl.
+
+    def inner(xl, rw, wg, wu, wd):
+        ti = jax.lax.axis_index(tp)
+        if scfg.fsdp is not None:
+            # explicit ZeRO-3 just-in-time parameter gathers
+            wg = jax.lax.all_gather(wg, scfg.fsdp, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, scfg.fsdp, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, scfg.fsdp, axis=2, tiled=True)
+        xt = xl.reshape(-1, D)
+        out, load = _local_moe(
+            xt, rw, wg, wu, wd, top_k=cfg.moe_top_k,
+            n_experts_global=cfg.n_experts,
+            capacity_factor=cfg.moe_capacity, ep=ep,
+            tp_size=tp_size, tp_index=ti)
+        out = jax.lax.psum(out, tp)
+        load = jax.lax.pmean(load, tp)
+        load = jax.lax.pmean(load, scfg.dp)
+        return out.reshape(xl.shape), load
+
+    pspec = moe_params_spec(cfg, scfg, tp_size)
+    fn = jax.shard_map(inner, mesh=mesh,
+                       in_specs=(P(x_dp, None, None), pspec["router"],
+                                 pspec["w_gate"], pspec["w_up"],
+                                 pspec["w_down"]),
+                       out_specs=(P(x_dp, None, None), P(None)),
+                       check_vma=False)
+    return fn(x, params["router"], params["w_gate"], params["w_up"],
+              params["w_down"])

@@ -1,0 +1,192 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma / Griffin) and Mamba-1
+(falcon-mamba).  Both recurrences are diagonal over channels, so the
+channel dimension shards over the tp axis with zero cross-shard traffic
+inside the scan (DESIGN.md §6).
+
+Train/prefill run the recurrence with an associative scan (log-depth);
+decode is an O(1) state update.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (Griffin): y_t = a_t * y_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def _rglru_coeffs(x, params):
+    """Per-timestep gate and log-coefficients.  x: (B, S, W)."""
+    r = jax.nn.sigmoid(x @ params["w_rg"].astype(x.dtype))    # recurrence gate
+    i = jax.nn.sigmoid(x @ params["w_ig"].astype(x.dtype))    # input gate
+    log_a = -_RGLRU_C * jax.nn.softplus(
+        params["lambda"].astype(jnp.float32)) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = (x * i).astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * gated
+
+
+def _assoc_scan_diag(a, u):
+    """h_t = a_t * h_{t-1} + u_t along axis 1 via associative scan."""
+    def comb(l, r):
+        al, ul = l
+        ar, ur = r
+        return al * ar, ur + ar * ul
+    _, h = jax.lax.associative_scan(comb, (a, u), axis=1)
+    return h
+
+
+def rglru_seq(x, params):
+    """x: (B, S, W) conv-mixed inputs.  Returns (B, S, W), final state."""
+    a, u = _rglru_coeffs(x, params)
+    h = _assoc_scan_diag(a, u)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(x_t, state, params):
+    """x_t: (B, W); state: (B, W) float32."""
+    a, u = _rglru_coeffs(x_t[:, None], params)
+    h = a[:, 0] * state + u[:, 0]
+    return h.astype(x_t.dtype), h
+
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv.  x: (B, S, C), w: (K, C).
+    With ``state`` (B, K-1, C) performs a streaming step (S == 1)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+        new_state = xp[:, -(K - 1):] if K > 1 else None
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+        new_state = xp[:, -(K - 1):] if K > 1 else None
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(K))
+    return out, new_state
+
+
+def rglru_block(x, params, *, decode_state=None):
+    """Full recurrent block (Griffin): in-proj -> conv -> RG-LRU -> gated
+    out-proj.  x: (B, S, D).  Returns (out, new_state dict or None)."""
+    h = x @ params["w_in"].astype(x.dtype)          # (B, S, W)
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(x.dtype))
+    if decode_state is None:
+        h, _ = causal_conv1d(h, params["conv_w"])
+        h, _ = rglru_seq(h, params)
+        new_state = None
+    else:
+        h, conv_state = causal_conv1d(h, params["conv_w"],
+                                      decode_state["conv"])
+        h_t, lru_state = rglru_step(h[:, 0], decode_state["lru"], params)
+        h = h_t[:, None]
+        new_state = {"conv": conv_state, "lru": lru_state}
+    out = (h * gate) @ params["w_out"].astype(x.dtype)
+    return out, new_state
+
+
+def rglru_init(key, d_model: int, width: int, conv_k: int = 4):
+    ks = jax.random.split(key, 5)
+    s = d_model ** -0.5
+    return {
+        "w_in": jax.random.normal(ks[0], (d_model, width)) * s,
+        "w_gate": jax.random.normal(ks[1], (d_model, width)) * s,
+        "w_rg": jax.random.normal(ks[2], (width, width)) * width ** -0.5,
+        "w_ig": jax.random.normal(ks[3], (width, width)) * width ** -0.5,
+        "lambda": jnp.linspace(0.9, 5.0, width),
+        "conv_w": jax.random.normal(ks[4], (conv_k, width)) * 0.1,
+        "w_out": jax.random.normal(ks[0], (width, d_model)) * width ** -0.5,
+    }
+
+
+def rglru_decode_state(batch: int, width: int, conv_k: int = 4):
+    return {"conv": jnp.zeros((batch, conv_k - 1, width), jnp.float32),
+            "lru": jnp.zeros((batch, width), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 selective SSM (falcon-mamba)
+# ---------------------------------------------------------------------------
+
+def mamba_block(x, params, *, ssm_state: int = 16, decode_state=None):
+    """x: (B, S, D).  d_inner = w_in.shape[1] // 2."""
+    B, S, D = x.shape
+    xz = x @ params["w_in"].astype(x.dtype)          # (B, S, 2*Din)
+    d_in = xz.shape[-1] // 2
+    xr, z = xz[..., :d_in], xz[..., d_in:]
+    if decode_state is None:
+        xr, _ = causal_conv1d(xr, params["conv_w"])
+        conv_state = None
+    else:
+        xr, conv_state = causal_conv1d(xr, params["conv_w"],
+                                       decode_state["conv"])
+    xr = jax.nn.silu(xr)
+
+    # input-dependent SSM parameters
+    bcd = xr @ params["w_x"].astype(x.dtype)         # (B, S, 2N + dt_rank)
+    N = ssm_state
+    dt_rank = params["w_dt"].shape[0]
+    Bm = bcd[..., :N].astype(jnp.float32)
+    Cm = bcd[..., N:2 * N].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        bcd[..., 2 * N:] @ params["w_dt"].astype(x.dtype) +
+        params["dt_bias"].astype(x.dtype)).astype(jnp.float32)  # (B,S,Din)
+
+    A = -jnp.exp(params["log_a"].astype(jnp.float32))           # (Din, N)
+    da = jnp.exp(dt[..., None] * A)                             # (B,S,Din,N)
+    db = dt[..., None] * Bm[..., None, :]                       # (B,S,Din,N)
+    u = db * xr.astype(jnp.float32)[..., None]
+
+    if decode_state is None:
+        def comb(l, r):
+            al, ul = l
+            ar, ur = r
+            return al * ar, ur + ar * ul
+        _, h = jax.lax.associative_scan(comb, (da, u), axis=1)
+        new_state = None
+    else:
+        h = da[:, 0] * decode_state["ssm"] + u[:, 0]
+        new_state = {"conv": conv_state, "ssm": h}
+        h = h[:, None]
+
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cm)
+    y = y + params["d_skip"].astype(jnp.float32) * \
+        xr.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["w_out"].astype(x.dtype), new_state
+
+
+def mamba_init(key, d_model: int, d_inner: int, ssm_state: int = 16,
+               conv_k: int = 4, dt_rank: int | None = None):
+    dt_rank = dt_rank or max(1, math.ceil(d_model / 16))
+    ks = jax.random.split(key, 5)
+    s = d_model ** -0.5
+    return {
+        "w_in": jax.random.normal(ks[0], (d_model, 2 * d_inner)) * s,
+        "conv_w": jax.random.normal(ks[1], (conv_k, d_inner)) * 0.1,
+        "w_x": jax.random.normal(ks[2], (d_inner,
+                                         2 * ssm_state + dt_rank)) *
+        d_inner ** -0.5,
+        "w_dt": jax.random.normal(ks[3], (dt_rank, d_inner)) *
+        dt_rank ** -0.5,
+        "dt_bias": jnp.full((d_inner,), -4.0),
+        "log_a": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ssm_state + 1, dtype=jnp.float32),
+            (d_inner, ssm_state))),
+        "d_skip": jnp.ones((d_inner,)),
+        "w_out": jax.random.normal(ks[4], (d_inner, d_model)) *
+        d_inner ** -0.5,
+    }
+
+
+def mamba_decode_state(batch: int, d_inner: int, ssm_state: int = 16,
+                       conv_k: int = 4):
+    return {"conv": jnp.zeros((batch, conv_k - 1, d_inner), jnp.float32),
+            "ssm": jnp.zeros((batch, d_inner, ssm_state), jnp.float32)}

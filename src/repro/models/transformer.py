@@ -1,0 +1,549 @@
+"""Unified decoder LM covering all assigned architectures.
+
+Layer kinds (config.pattern, cycled over n_layers):
+  "attn"  — full causal GQA attention
+  "swa"   — sliding-window attention (window = cfg.local_window)
+  "local" — alias of swa (gemma3 local layers)
+  "rglru" — RG-LRU recurrent block (recurrentgemma)
+  "mamba" — Mamba-1 selective SSM block (falcon-mamba; no MLP)
+
+Layers are executed as PATTERN GROUPS: the pattern is repeated
+n_layers // len(pattern) times via lax.scan over stacked group params
+(small HLO, one compile of the group body), with the remainder layers
+unrolled.  Each group body is wrapped in jax.checkpoint (remat).
+
+Modality frontends are STUBS per the assignment: ``prefix_embeds``
+(precomputed ViT patch / conditioning embeddings) are concatenated ahead
+of the token embeddings when present.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import recurrent as rec_lib
+from repro.models.common import (ShardCfg, apply_rope, dense, rms_norm,
+                                 rope_angles, rope_single)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    d_ff: int = 256
+    vocab: int = 512
+    head_dim: int = 0                   # 0 => d_model // n_heads
+    pattern: tuple = ("attn",)
+    local_window: int = 1024
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = True
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    moe_top_k: int = 2
+    moe_capacity: float = 1.25
+    # recurrent
+    lru_width: int = 0                  # 0 => d_model
+    mamba_d_inner: int = 0              # 0 => 2 * d_model
+    ssm_state: int = 16
+    # execution
+    dtype: Any = jnp.bfloat16
+    max_seq: int = 8192
+    norm_eps: float = 1e-6
+    # modality stub: number of prefix embedding positions (vlm/audio)
+    prefix_len: int = 0
+    # §Perf hillclimb levers (EXPERIMENTS.md §Perf)
+    perf_bf16_norms: bool = False   # H1: bf16 norm/residual bwd chains
+    perf_remat_flash: bool = False  # H5: recompute attn scores in bwd
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def layer_kinds(self) -> tuple:
+        reps = -(-self.n_layers // len(self.pattern))
+        return (self.pattern * reps)[: self.n_layers]
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def n_rem(self) -> int:
+        return self.n_layers - self.n_groups * len(self.pattern)
+
+
+# ---------------------------------------------------------------------------
+# parameter init + partition specs
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, kind: str):
+    D, F, H, Hkv, Dh = (cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.n_kv_heads,
+                        cfg.hd)
+    ks = jax.random.split(key, 12)
+    p: dict = {"norm1": jnp.zeros((D,))}
+    if kind in ("attn", "swa", "local"):
+        p["wq"] = jax.random.normal(ks[0], (D, H * Dh)) * D ** -0.5
+        p["wk"] = jax.random.normal(ks[1], (D, Hkv * Dh)) * D ** -0.5
+        p["wv"] = jax.random.normal(ks[2], (D, Hkv * Dh)) * D ** -0.5
+        p["wo"] = jax.random.normal(ks[3], (H * Dh, D)) * (H * Dh) ** -0.5
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((H * Dh,))
+            p["bk"] = jnp.zeros((Hkv * Dh,))
+            p["bv"] = jnp.zeros((Hkv * Dh,))
+    elif kind == "rglru":
+        p["rglru"] = rec_lib.rglru_init(ks[0], D, cfg.lru_width or D)
+    elif kind == "mamba":
+        p["mamba"] = rec_lib.mamba_init(ks[0], D,
+                                        cfg.mamba_d_inner or 2 * D,
+                                        cfg.ssm_state)
+    else:
+        raise ValueError(kind)
+    if kind != "mamba":                      # mamba blocks carry no MLP
+        p["norm2"] = jnp.zeros((D,))
+        if cfg.moe:
+            ek = jax.random.split(ks[4], 4)
+            E = cfg.n_experts
+            p["moe"] = {
+                "router": jax.random.normal(ek[0], (D, E)) * D ** -0.5,
+                "w_gate": jax.random.normal(ek[1], (E, D, F)) * D ** -0.5,
+                "w_up": jax.random.normal(ek[2], (E, D, F)) * D ** -0.5,
+                "w_down": jax.random.normal(ek[3], (E, F, D)) * F ** -0.5,
+            }
+        else:
+            p["w_gate"] = jax.random.normal(ks[5], (D, F)) * D ** -0.5
+            p["w_up"] = jax.random.normal(ks[6], (D, F)) * D ** -0.5
+            p["w_down"] = jax.random.normal(ks[7], (F, D)) * F ** -0.5
+    return p
+
+
+def _layer_spec(cfg: ModelConfig, kind: str, scfg: ShardCfg,
+                tp_size: int = 16):
+    D, F, H, Hkv, Dh = (cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.n_kv_heads,
+                        cfg.hd)
+    t, f = scfg.tp, scfg.fsdp
+    kv_t = t if (Hkv * Dh) % tp_size == 0 else None
+    p: dict = {"norm1": P(None)}
+    if kind in ("attn", "swa", "local"):
+        p["wq"] = P(f, t)
+        p["wk"] = P(f, kv_t)
+        p["wv"] = P(f, kv_t)
+        p["wo"] = P(t, f)
+        if cfg.qkv_bias:
+            p["bq"] = P(t)
+            p["bk"] = P(kv_t)
+            p["bv"] = P(kv_t)
+    elif kind == "rglru":
+        W = cfg.lru_width or D
+        p["rglru"] = {"w_in": P(f, t), "w_gate": P(f, t),
+                      "w_rg": P(f, t), "w_ig": P(f, t),
+                      "lambda": P(t), "conv_w": P(None, t),
+                      "w_out": P(t, f)}
+    elif kind == "mamba":
+        p["mamba"] = {"w_in": P(f, t), "conv_w": P(None, t),
+                      "w_x": P(t, None), "w_dt": P(None, t),
+                      "dt_bias": P(t), "log_a": P(t, None),
+                      "d_skip": P(t), "w_out": P(t, f)}
+    if kind != "mamba":
+        p["norm2"] = P(None)
+        if cfg.moe:
+            p["moe"] = moe_lib.moe_params_spec(cfg, scfg, tp_size)
+        else:
+            p["w_gate"] = P(f, t)
+            p["w_up"] = P(f, t)
+            p["w_down"] = P(t, f)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, cfg.n_layers + 3)
+    kinds = cfg.layer_kinds
+    plen = len(cfg.pattern)
+    groups = []
+    for pi in range(plen):
+        per_group = [_layer_init(ks[g * plen + pi], cfg, cfg.pattern[pi])
+                     for g in range(cfg.n_groups)]
+        groups.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_group)
+                      if per_group else None)
+    rem = [_layer_init(ks[cfg.n_groups * plen + i], cfg,
+                       kinds[cfg.n_groups * plen + i])
+           for i in range(cfg.n_rem)]
+    params = {
+        "embed": jax.random.normal(ks[-1], (cfg.vocab, cfg.d_model)) *
+        cfg.d_model ** -0.5,
+        "final_norm": jnp.zeros((cfg.d_model,)),
+        "groups": {f"pat{pi}": g for pi, g in enumerate(groups)
+                   if g is not None},
+        "rem": rem,
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = jax.random.normal(
+            ks[-2], (cfg.d_model, cfg.vocab)) * cfg.d_model ** -0.5
+    return params
+
+
+def params_pspec(cfg: ModelConfig, scfg: ShardCfg, tp_size: int = 16):
+    plen = len(cfg.pattern)
+
+    def stacked(spec_tree):
+        return jax.tree.map(lambda s: P(None, *s), spec_tree,
+                            is_leaf=lambda s: isinstance(s, P))
+
+    groups = {f"pat{pi}": stacked(_layer_spec(cfg, cfg.pattern[pi], scfg,
+                                              tp_size))
+              for pi in range(plen) if cfg.n_groups > 0}
+    kinds = cfg.layer_kinds
+    rem = [_layer_spec(cfg, kinds[cfg.n_groups * plen + i], scfg, tp_size)
+           for i in range(cfg.n_rem)]
+    spec = {
+        "embed": P(scfg.tp, scfg.fsdp),
+        "final_norm": P(None),
+        "groups": groups,
+        "rem": rem,
+    }
+    if not cfg.tie_embeddings:
+        spec["head"] = P(scfg.fsdp, scfg.tp)
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+def _shard(x, mesh, scfg, *axes):
+    """Constraint helper: applies only if every named axis divides."""
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    def ok(dim, ax):
+        if ax is None:
+            return True
+        names = ax if isinstance(ax, tuple) else (ax,)
+        tot = int(np.prod([sizes[a] for a in names]))
+        return dim % tot == 0
+    if all(ok(d, a) for d, a in zip(x.shape, axes)):
+        sh = jax.sharding.NamedSharding(mesh, P(*axes))
+        return jax.lax.with_sharding_constraint(x, sh)
+    return x
+
+
+def _attn_layer(x, p, cfg, kind, scfg, mesh, rope, positions,
+                cache=None, cache_len=None):
+    B, S, D = x.shape
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, p["norm1"], cfg.norm_eps, cfg.perf_bf16_norms)
+    q = dense(h, p["wq"], p.get("bq"))
+    k = dense(h, p["wk"], p.get("bk"))
+    v = dense(h, p["wv"], p.get("bv"))
+    q = _shard(q, mesh, scfg, scfg.dp, None, scfg.tp)
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, Hkv, Dh)
+    v = v.reshape(B, S, Hkv, Dh)
+    cos, sin = rope
+    q = apply_rope(q, cos, sin, positions)
+    k = apply_rope(k, cos, sin, positions)
+    window = cfg.local_window if kind in ("swa", "local") else 0
+
+    new_cache = None
+    if cache is None:
+        out = attn_lib.flash_attention(q, k, v, window=window,
+                                       remat=cfg.perf_remat_flash)
+    else:
+        S_max = cache["k"].shape[1]
+        slot = cache_len % S_max if window else jnp.minimum(
+            cache_len, S_max - 1)
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        new_cache = {"k": kc, "v": vc}
+        n_valid = jnp.minimum(cache_len + 1, S_max)
+        out = attn_lib.decode_attention(q, kc, vc, n_valid, window=0)
+    out = out.reshape(B, S, H * Dh)
+    out = dense(out, p["wo"])
+    return x + _shard(out, mesh, scfg, scfg.dp, None, None), new_cache
+
+
+def _mlp(x, p, cfg, scfg, mesh):
+    h = rms_norm(x, p["norm2"], cfg.norm_eps, cfg.perf_bf16_norms)
+    if cfg.moe:
+        out, load = moe_lib.moe_ffn(h, p["moe"], cfg, scfg, mesh)
+        return x + out, load
+    g = jax.nn.silu(dense(h, p["w_gate"]))
+    u = dense(h, p["w_up"])
+    g = _shard(g, mesh, scfg, scfg.dp, None, scfg.tp)
+    out = dense(g * u, p["w_down"])
+    return x + _shard(out, mesh, scfg, scfg.dp, None, None), None
+
+
+def _apply_layer(x, p, cfg, kind, scfg, mesh, rope, positions,
+                 cache=None, cache_len=None):
+    """Returns (x, new_cache, router_load)."""
+    load = None
+    if kind in ("attn", "swa", "local"):
+        x, new_cache = _attn_layer(x, p, cfg, kind, scfg, mesh, rope,
+                                   positions, cache, cache_len)
+        x, load = _mlp(x, p, cfg, scfg, mesh)
+    elif kind == "rglru":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps, cfg.perf_bf16_norms)
+        if cache is None:
+            out, _ = rec_lib.rglru_block(h, p["rglru"])
+            new_cache = None
+        else:
+            out, new_cache = rec_lib.rglru_block(h, p["rglru"],
+                                                 decode_state=cache)
+        x = x + out
+        x, load = _mlp(x, p, cfg, scfg, mesh)
+    elif kind == "mamba":
+        h = rms_norm(x, p["norm1"], cfg.norm_eps, cfg.perf_bf16_norms)
+        if cache is None:
+            out, _ = rec_lib.mamba_block(h, p["mamba"],
+                                         ssm_state=cfg.ssm_state)
+            new_cache = None
+        else:
+            out, new_cache = rec_lib.mamba_block(h, p["mamba"],
+                                                 ssm_state=cfg.ssm_state,
+                                                 decode_state=cache)
+        x = x + out
+    else:
+        raise ValueError(kind)
+    return x, new_cache, load
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _embed(params, cfg, tokens, prefix_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.dtype), x], axis=1)
+    return x
+
+
+def _run_layers(params, cfg, scfg, mesh, x, positions, rope):
+    """Training/prefill layer stack: scan over groups + unrolled tail."""
+    plen = len(cfg.pattern)
+    loads = []
+
+    if cfg.n_groups > 0:
+        group_params = tuple(params["groups"][f"pat{pi}"]
+                             for pi in range(plen))
+
+        def body(x, gp):
+            for pi in range(plen):
+                x, _, load = _apply_layer(x, gp[pi], cfg, cfg.pattern[pi],
+                                          scfg, mesh, rope, positions)
+            x = _shard(x, mesh, scfg, scfg.dp, None, None)
+            return x, load if load is not None else jnp.zeros((1,))
+
+        body = jax.checkpoint(body)
+        x, g_loads = jax.lax.scan(body, x, group_params)
+        loads.append(g_loads)
+
+    kinds = cfg.layer_kinds
+    for i, p in enumerate(params["rem"]):
+        x, _, load = _apply_layer(x, p, cfg, kinds[cfg.n_groups * plen + i],
+                                  scfg, mesh, rope, positions)
+    return x, loads
+
+
+def _chunked_xent(x, head, labels, cfg, scfg, mesh, block: int = 1024):
+    """Mean xent without ever materializing (B, S, V) logits: scan over
+    sequence blocks, remat the block body (logits are recomputed in the
+    backward pass — same FLOPs, ~S/block times less live memory)."""
+    B, S, D = x.shape
+    block = min(block, S)
+    n_blk = S // block
+    tail = S - n_blk * block
+
+    def block_loss(xb, lb):
+        logits = (xb @ head.astype(cfg.dtype)).astype(jnp.float32)
+        logits = _shard(logits, mesh, scfg, scfg.dp, None, scfg.tp)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - tgt)
+
+    block_loss = jax.checkpoint(block_loss)
+    total = jnp.zeros((), jnp.float32)
+    if n_blk:
+        xb = x[:, : n_blk * block].reshape(B, n_blk, block, D)
+        lb = labels[:, : n_blk * block].reshape(B, n_blk, block)
+
+        def body(acc, blk):
+            return acc + block_loss(blk[0], blk[1]), None
+
+        total, _ = jax.lax.scan(
+            body, total, (xb.transpose(1, 0, 2, 3), lb.transpose(1, 0, 2)))
+    if tail:
+        total = total + block_loss(x[:, n_blk * block:],
+                                   labels[:, n_blk * block:])
+    return total / (B * S)
+
+
+def forward_train(params, tokens, labels, cfg: ModelConfig,
+                  scfg: ShardCfg = ShardCfg(), mesh=None,
+                  prefix_embeds=None):
+    """Returns (mean xent loss, aux dict)."""
+    B, S = tokens.shape
+    x = _embed(params, cfg, tokens, prefix_embeds)
+    S_tot = x.shape[1]
+    x = _shard(x, mesh, scfg, scfg.dp, None, None)
+    positions = jnp.arange(S_tot)
+    rope = rope_angles(cfg.hd, S_tot, cfg.rope_theta)
+    x, loads = _run_layers(params, cfg, scfg, mesh, x, positions, rope)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    # next-token loss over the token region only (prefix positions drop out)
+    x = x[:, S_tot - S:, :]
+    loss = _chunked_xent(x[:, :-1], head, labels[:, 1:], cfg, scfg, mesh)
+    aux = {}
+    if cfg.moe and loads:
+        lvec = jnp.concatenate([l.reshape(-1, l.shape[-1])
+                                for l in loads]).mean(0)
+        aux["moe_aux"] = cfg.n_experts * jnp.sum(lvec * lvec)
+    return loss, aux
+
+
+def forward_prefill(params, tokens, cfg: ModelConfig,
+                    scfg: ShardCfg = ShardCfg(), mesh=None,
+                    prefix_embeds=None):
+    """Inference prefill: returns last-position logits (no cache build —
+    the prefill benchmark measures the forward; decode uses its own path).
+    """
+    B, S = tokens.shape
+    x = _embed(params, cfg, tokens, prefix_embeds)
+    S_tot = x.shape[1]
+    x = _shard(x, mesh, scfg, scfg.dp, None, None)
+    positions = jnp.arange(S_tot)
+    rope = rope_angles(cfg.hd, S_tot, cfg.rope_theta)
+    x, _ = _run_layers(params, cfg, scfg, mesh, x, positions, rope)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return (x @ head.astype(cfg.dtype)).astype(jnp.float32)
+
+
+# -- decode -----------------------------------------------------------------
+
+def _cache_for_kind(cfg, kind, batch, max_len):
+    Hkv, Dh = cfg.n_kv_heads, cfg.hd
+    if kind in ("swa", "local"):
+        return {"k": jnp.zeros((batch, min(max_len, cfg.local_window),
+                                Hkv, Dh), cfg.dtype),
+                "v": jnp.zeros((batch, min(max_len, cfg.local_window),
+                                Hkv, Dh), cfg.dtype)}
+    if kind == "attn":
+        return {"k": jnp.zeros((batch, max_len, Hkv, Dh), cfg.dtype),
+                "v": jnp.zeros((batch, max_len, Hkv, Dh), cfg.dtype)}
+    if kind == "rglru":
+        return rec_lib.rglru_decode_state(batch, cfg.lru_width or
+                                          cfg.d_model)
+    if kind == "mamba":
+        return rec_lib.mamba_decode_state(batch, cfg.mamba_d_inner or
+                                          2 * cfg.d_model, cfg.ssm_state)
+    raise ValueError(kind)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int):
+    plen = len(cfg.pattern)
+    cache = {"groups": {}, "rem": []}
+    for pi in range(plen):
+        if cfg.n_groups == 0:
+            continue
+        per = [_cache_for_kind(cfg, cfg.pattern[pi], batch, max_len)
+               for _ in range(cfg.n_groups)]
+        cache["groups"][f"pat{pi}"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *per)
+    kinds = cfg.layer_kinds
+    for i in range(cfg.n_rem):
+        cache["rem"].append(_cache_for_kind(
+            cfg, kinds[cfg.n_groups * plen + i], batch, max_len))
+    return cache
+
+
+def cache_pspec(cfg: ModelConfig, scfg: ShardCfg, tp_size: int = 16):
+    """KV caches shard batch over dp; heads over tp when divisible."""
+    def kind_spec(kind, stacked):
+        lead = (None,) if stacked else ()
+        if kind in ("attn", "swa", "local"):
+            kv_t = scfg.tp if (cfg.n_kv_heads % tp_size == 0) else None
+            s = P(*lead, scfg.dp, None, kv_t, None)
+            return {"k": s, "v": s}
+        if kind == "rglru":
+            return {"conv": P(*lead, scfg.dp, None, scfg.tp),
+                    "lru": P(*lead, scfg.dp, scfg.tp)}
+        if kind == "mamba":
+            return {"conv": P(*lead, scfg.dp, None, scfg.tp),
+                    "ssm": P(*lead, scfg.dp, scfg.tp, None)}
+        raise ValueError(kind)
+
+    plen = len(cfg.pattern)
+    spec = {"groups": {}, "rem": []}
+    for pi in range(plen):
+        if cfg.n_groups:
+            spec["groups"][f"pat{pi}"] = kind_spec(cfg.pattern[pi], True)
+    kinds = cfg.layer_kinds
+    for i in range(cfg.n_rem):
+        spec["rem"].append(kind_spec(kinds[cfg.n_groups * plen + i], False))
+    return spec
+
+
+def forward_decode(params, token, cache, cache_len, cfg: ModelConfig,
+                   scfg: ShardCfg = ShardCfg(), mesh=None):
+    """One decode step.  token: (B, 1) int32; cache_len: scalar int32.
+    Returns (logits (B, 1, V), new cache)."""
+    B = token.shape[0]
+    x = _embed(params, cfg, token)
+    x = _shard(x, mesh, scfg, scfg.dp, None, None)
+    # per-position rope rows — no (max_seq, hd/2) table at 500k contexts
+    pos_now = jnp.full((B, 1), cache_len, jnp.int32)
+    rope = rope_single(cfg.hd, pos_now, cfg.rope_theta)
+    positions = None
+    plen = len(cfg.pattern)
+    new_cache = {"groups": {}, "rem": []}
+
+    if cfg.n_groups > 0:
+        group_params = tuple(params["groups"][f"pat{pi}"]
+                             for pi in range(plen))
+        group_cache = tuple(cache["groups"][f"pat{pi}"]
+                            for pi in range(plen))
+
+        def body(x, gpc):
+            gp, gc = gpc
+            ncs = []
+            for pi in range(plen):
+                x, nc, _ = _apply_layer(x, gp[pi], cfg, cfg.pattern[pi],
+                                        scfg, mesh, rope, positions,
+                                        cache=gc[pi], cache_len=cache_len)
+                ncs.append(nc)
+            return x, tuple(ncs)
+
+        x, new_gcache = jax.lax.scan(body, x, (group_params, group_cache))
+        for pi in range(plen):
+            new_cache["groups"][f"pat{pi}"] = new_gcache[pi]
+
+    kinds = cfg.layer_kinds
+    for i, p in enumerate(params["rem"]):
+        x, nc, _ = _apply_layer(x, p, cfg, kinds[cfg.n_groups * plen + i],
+                                scfg, mesh, rope, positions,
+                                cache=cache["rem"][i], cache_len=cache_len)
+        new_cache["rem"].append(nc)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (x @ head.astype(cfg.dtype)).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,84 @@
+"""Functional AdamW with sharded state.
+
+Optimizer moments inherit the parameters' PartitionSpecs — combined with
+FSDP parameter sharding (ShardCfg.fsdp) this is ZeRO-3: parameters,
+gradients and moments are all fully sharded; GSPMD inserts the
+reduce-scatter / all-gather pattern.  fp32 moments over (possibly bf16)
+params; decoupled weight decay; global-norm clipping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Any = 3e-4                 # float or callable(step) -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params):
+        grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        b1, b2 = self.b1, self.b2
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g
+            v_new = b2 * v + (1 - b2) * g * g
+            mh = m_new / (1 - b1 ** step.astype(jnp.float32))
+            vh = v_new / (1 - b2 ** step.astype(jnp.float32))
+            delta = mh / (jnp.sqrt(vh) + self.eps) + \
+                self.weight_decay * p.astype(jnp.float32)
+            return (-lr * delta).astype(p.dtype), m_new, v_new
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return updates, AdamWState(step=step, m=m, v=v), gnorm
+
+    def state_pspec(self, param_pspec):
+        from jax.sharding import PartitionSpec as P
+        return AdamWState(step=P(), m=param_pspec, v=param_pspec)

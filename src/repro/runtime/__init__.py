@@ -1,0 +1,6 @@
+from repro.runtime.fault import PreemptionGuard, StragglerMonitor
+from repro.runtime.compression import compressed_psum, quantize_int8, \
+    dequantize_int8
+
+__all__ = ["PreemptionGuard", "StragglerMonitor", "compressed_psum",
+           "quantize_int8", "dequantize_int8"]

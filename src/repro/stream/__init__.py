@@ -1,0 +1,7 @@
+from repro.stream.generator import (power_law_stream, lkml_like_stream,
+                                    variance_stream)
+from repro.stream.loader import load_konect
+from repro.stream.pipeline import StreamPipeline
+
+__all__ = ["power_law_stream", "lkml_like_stream", "variance_stream",
+           "load_konect", "StreamPipeline"]

@@ -1,0 +1,83 @@
+"""Chunked, resumable stream pipeline.
+
+Feeds any sketch (HIGGS or baseline) in fixed batches with a persistable
+cursor, so ingestion can resume after preemption (framework fault
+tolerance — see ``repro.runtime``).  Also used by the LM-framework
+integration to emit token-transition graph streams (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, Iterator
+
+import numpy as np
+
+
+class StreamPipeline:
+    def __init__(self, src, dst, w, t, batch: int = 8192):
+        self.arrays = (np.asarray(src), np.asarray(dst),
+                       np.asarray(w), np.asarray(t))
+        self.batch = batch
+        self.cursor = 0
+
+    def __len__(self) -> int:
+        return len(self.arrays[0])
+
+    def __iter__(self) -> Iterator[tuple]:
+        n = len(self)
+        while self.cursor < n:
+            sl = slice(self.cursor, min(self.cursor + self.batch, n))
+            # advance BEFORE yielding so a checkpointed cursor never
+            # replays a batch already handed out
+            self.cursor = sl.stop
+            yield tuple(a[sl] for a in self.arrays)
+
+    def feed(self, sketch, progress: Callable[[int], None] | None = None,
+             flush: bool = True) -> None:
+        for batch in self:
+            sketch.insert(*batch)
+            if progress:
+                progress(self.cursor)
+        if flush:
+            sketch.flush()
+
+    # -- fault tolerance ------------------------------------------------
+    def save_cursor(self, path: str) -> None:
+        with open(path, "w") as fh:
+            json.dump({"cursor": self.cursor, "batch": self.batch}, fh)
+
+    def restore_cursor(self, path: str) -> None:
+        if os.path.exists(path):
+            with open(path) as fh:
+                meta = json.load(fh)
+            self.cursor = int(meta["cursor"])
+
+
+def token_transition_stream(tokens: np.ndarray, step: int):
+    """LM integration: one training batch (B, S) of token ids becomes a
+    graph-stream batch of (prev_token -> next_token) edges at time=step."""
+    tokens = np.asarray(tokens)
+    src = tokens[:, :-1].reshape(-1).astype(np.uint32)
+    dst = tokens[:, 1:].reshape(-1).astype(np.uint32)
+    w = np.ones(src.shape, np.float32)
+    t = np.full(src.shape, step, np.uint32)
+    return src, dst, w, t
+
+
+def expert_coactivation_stream(expert_ids: np.ndarray, step: int):
+    """MoE integration: per-token top-k expert sets (N, k) become pairwise
+    expert co-activation edges at time=step."""
+    e = np.asarray(expert_ids)
+    n, k = e.shape
+    srcs, dsts = [], []
+    for i in range(k):
+        for j in range(k):
+            if i != j:
+                srcs.append(e[:, i])
+                dsts.append(e[:, j])
+    src = np.concatenate(srcs).astype(np.uint32)
+    dst = np.concatenate(dsts).astype(np.uint32)
+    w = np.ones(src.shape, np.float32)
+    t = np.full(src.shape, step, np.uint32)
+    return src, dst, w, t

@@ -1,0 +1,103 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and finiteness (assignment deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfglib
+from repro.launch.mesh import make_local_mesh
+from repro.models import transformer as tfm
+from repro.models.common import ShardCfg
+from repro.optim import AdamW
+
+
+SCFG = ShardCfg(dp=("data",), tp="model", fsdp=None)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_local_mesh()
+
+
+@pytest.mark.parametrize("arch", cfglib.ARCH_IDS)
+def test_smoke_train_step(arch, mesh):
+    cfg = cfglib.get_config(arch, reduced=True)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 32
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+    }
+    if cfg.prefix_len:
+        batch["prefix_embeds"] = jnp.zeros((B, cfg.prefix_len, cfg.d_model),
+                                           jnp.bfloat16)
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(params)
+
+    from repro.launch.steps import make_train_step
+    step = jax.jit(make_train_step(cfg, SCFG, mesh, opt))
+    params2, opt_state2, metrics = step(params, opt_state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), f"{arch}: loss not finite"
+    assert loss > 0
+    # params actually changed and stayed finite
+    leaves_before = jax.tree.leaves(params)
+    leaves_after = jax.tree.leaves(params2)
+    assert any(not np.allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32))
+               for a, b in zip(leaves_before, leaves_after))
+    assert all(np.isfinite(np.asarray(b, np.float32)).all()
+               for b in leaves_after), f"{arch}: non-finite params"
+
+
+@pytest.mark.parametrize("arch", cfglib.ARCH_IDS)
+def test_smoke_prefill_and_decode(arch, mesh):
+    cfg = cfglib.get_config(arch, reduced=True)
+    params = tfm.init_params(jax.random.PRNGKey(1), cfg)
+    B, S = 2, 16
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    logits = tfm.forward_prefill(params, tokens, cfg, SCFG, mesh)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    cache = tfm.init_decode_cache(cfg, B, 64)
+    lg, cache = tfm.forward_decode(params, tokens[:, :1], cache,
+                                   jnp.int32(0), cfg, SCFG, mesh)
+    assert lg.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(lg, np.float32)).all()
+    lg2, _ = tfm.forward_decode(params, tokens[:, 1:2], cache,
+                                jnp.int32(1), cfg, SCFG, mesh)
+    assert np.isfinite(np.asarray(lg2, np.float32)).all()
+
+
+def test_decode_matches_prefill_next_token():
+    """Teacher-forced decode must reproduce the forward distribution:
+    feed tokens one by one through the cache and compare the final-step
+    logits with a full prefill."""
+    cfg = cfglib.get_config("llama3-8b", reduced=True)
+    mesh = make_local_mesh()
+    params = tfm.init_params(jax.random.PRNGKey(2), cfg)
+    B, S = 2, 12
+    rng = np.random.default_rng(2)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    want = tfm.forward_prefill(params, tokens, cfg, SCFG, mesh)
+    cache = tfm.init_decode_cache(cfg, B, S + 1)
+    for i in range(S):
+        got, cache = tfm.forward_decode(params, tokens[:, i:i + 1], cache,
+                                        jnp.int32(i), cfg, SCFG, mesh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0.05, atol=0.05)
+
+
+def test_all_40_cells_enumerated():
+    cells = cfglib.all_cells()
+    assert len(cells) == 40
+    skips = [(a, s) for a, s, ok in cells if not ok]
+    # exactly the pure full-attention archs skip long_500k
+    assert set(skips) == {
+        (a, "long_500k") for a in
+        ["pixtral-12b", "qwen1.5-32b", "minitron-8b", "llama3-8b",
+         "qwen3-moe-30b-a3b", "musicgen-large"]}

@@ -1,0 +1,82 @@
+"""Baselines: estimator sanity — one-sided error for CM-style methods,
+reasonable accuracy for fingerprint methods, temporal decomposition."""
+import numpy as np
+import pytest
+
+from repro.core.baselines import TCM, Horae, PGSS, AuxoTime
+from repro.core.oracle import ExactOracle
+
+
+@pytest.fixture(scope="module")
+def stream():
+    rng = np.random.default_rng(42)
+    n = 5000
+    src = rng.integers(0, 150, n).astype(np.uint32)
+    dst = rng.integers(0, 150, n).astype(np.uint32)
+    w = rng.integers(1, 8, n).astype(np.float64)
+    t = np.sort(rng.integers(0, 4096, n).astype(np.uint64))
+    ora = ExactOracle()
+    ora.insert(src, dst, w, t)
+    return (src, dst, w, t), ora
+
+
+RANGES = [(0, 4095), (100, 700), (2000, 2063)]
+
+
+@pytest.mark.parametrize("cls,kwargs", [
+    (Horae, dict(l_bits=12, d=64, b=4)),
+    (Horae, dict(l_bits=12, d=64, b=4, cpt=True)),
+    (PGSS, dict(l_bits=12, m=1 << 16)),
+    (AuxoTime, dict(l_bits=12, d=32, b=4)),
+    (AuxoTime, dict(l_bits=12, d=32, b=4, cpt=True)),
+])
+def test_temporal_one_sided_and_sane(stream, cls, kwargs):
+    (src, dst, w, t), ora = stream
+    sk = cls(**kwargs)
+    sk.insert(src, dst, w, t)
+    rng = np.random.default_rng(1)
+    for ts, te in RANGES:
+        qs = rng.integers(0, 150, 48).astype(np.uint32)
+        qd = rng.integers(0, 150, 48).astype(np.uint32)
+        est = sk.edge_query(qs, qd, ts, te)
+        true = ora.edge_query(qs, qd, ts, te)
+        assert (est >= true - 1e-6).all(), f"{sk.name} underestimated"
+        ev = sk.vertex_query(qs[:16], ts, te, "out")
+        tv = ora.vertex_query(qs[:16], ts, te, "out")
+        assert (ev >= tv - 1e-6).all(), f"{sk.name} vertex underestimated"
+
+
+def test_fingerprint_methods_much_more_accurate_than_pgss(stream):
+    (src, dst, w, t), ora = stream
+    horae = Horae(l_bits=12, d=64, b=4)
+    pgss = PGSS(l_bits=12, m=1 << 14)    # deliberately tight
+    for sk in (horae, pgss):
+        sk.insert(src, dst, w, t)
+    rng = np.random.default_rng(2)
+    qs = rng.integers(0, 150, 200).astype(np.uint32)
+    qd = rng.integers(0, 150, 200).astype(np.uint32)
+    true = ora.edge_query(qs, qd, 100, 3000)
+    err_h = np.abs(horae.edge_query(qs, qd, 100, 3000) - true).mean()
+    err_p = np.abs(pgss.edge_query(qs, qd, 100, 3000) - true).mean()
+    assert err_h <= err_p, "fingerprints should beat bare counters"
+
+
+def test_tcm_whole_stream(stream):
+    (src, dst, w, t), ora = stream
+    tcm = TCM(d=128, g=4)
+    tcm.insert(src, dst, w)
+    qs = np.arange(40, dtype=np.uint32)
+    qd = np.arange(40, 80, dtype=np.uint32)
+    est = tcm.edge_query(qs, qd)
+    true = ora.edge_query(qs, qd, 0, 1 << 62)
+    assert (est >= true - 1e-6).all()
+
+
+def test_dyadic_decomposition_minimal():
+    h = Horae(l_bits=10, d=8, b=2)
+    blocks = h._decompose(3, 12)   # [3,13) -> 3,[4,8),[8,12),12
+    covered = []
+    for level, prefix in blocks:
+        covered.extend(range(prefix << level, (prefix + 1) << level))
+    assert sorted(covered) == list(range(3, 13))
+    assert len(blocks) <= 2 * 10

@@ -1,0 +1,212 @@
+"""Core HIGGS invariants: one-sided error, exactness without collisions,
+aggregation losslessness, boundary-search coverage, deletions."""
+import numpy as np
+import pytest
+
+from repro.core.higgs import HiggsSketch
+from repro.core.oracle import ExactOracle
+from repro.core.params import HiggsParams
+
+
+def make_stream(n, n_vertices, t_max, seed, weights="ints"):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_vertices, n).astype(np.uint32)
+    dst = rng.integers(0, n_vertices, n).astype(np.uint32)
+    w = rng.integers(1, 10, n).astype(np.float32) if weights == "ints" \
+        else rng.exponential(1.0, n).astype(np.float32)
+    t = np.sort(rng.integers(0, t_max, n).astype(np.uint32))
+    return src, dst, w, t
+
+
+def build_pair(params, stream):
+    sk = HiggsSketch(params)
+    ora = ExactOracle()
+    sk.insert(*stream)
+    sk.flush()
+    ora.insert(*stream)
+    return sk, ora
+
+
+def assert_no_vertex_collisions(params, n_vertices):
+    """Exactness tests are only valid when no two vertices share the
+    (fingerprint, base-address) identity; verify the premise."""
+    from repro.core import hashing
+    bits = params.F1 + int(np.log2(params.d1))
+    ids = np.arange(n_vertices, dtype=np.uint32)
+    for seed in (params.seed, params.seed ^ 0x5BD1E995):
+        key = hashing.np_mix32(ids, seed) & ((1 << bits) - 1)
+        assert len(np.unique(key)) == n_vertices, \
+            "test premise violated: vertex identity collision"
+
+
+# 25-bit sketch identity => no collisions among the test's vertex sets
+PARAMS_SMALL = HiggsParams(d1=8, F1=22, b=3, r=4)
+
+
+class TestExactness:
+    """With ample fingerprint bits, estimates are exact (no collisions)."""
+
+    def test_edge_queries_exact(self):
+        assert_no_vertex_collisions(PARAMS_SMALL, 200)
+        stream = make_stream(4000, 200, 5000, seed=0)
+        sk, ora = build_pair(PARAMS_SMALL, stream)
+        rng = np.random.default_rng(1)
+        for ts, te in [(0, 5000), (100, 400), (2500, 2500), (4999, 5000)]:
+            q_s = rng.integers(0, 200, 64).astype(np.uint32)
+            q_d = rng.integers(0, 200, 64).astype(np.uint32)
+            est = sk.edge_query(q_s, q_d, ts, te)
+            true = ora.edge_query(q_s, q_d, ts, te)
+            np.testing.assert_allclose(est, true, rtol=1e-5)
+
+    def test_vertex_queries_exact(self):
+        stream = make_stream(4000, 200, 5000, seed=2)
+        sk, ora = build_pair(PARAMS_SMALL, stream)
+        rng = np.random.default_rng(3)
+        for direction in ("out", "in"):
+            for ts, te in [(0, 5000), (1000, 3000)]:
+                qv = rng.integers(0, 200, 32).astype(np.uint32)
+                est = sk.vertex_query(qv, ts, te, direction)
+                true = ora.vertex_query(qv, ts, te, direction)
+                np.testing.assert_allclose(est, true, rtol=1e-5)
+
+    def test_full_range_total(self):
+        stream = make_stream(3000, 100, 1000, seed=4)
+        sk, ora = build_pair(PARAMS_SMALL, stream)
+        qv = np.arange(100, dtype=np.uint32)
+        est = sk.vertex_query(qv, 0, 1000, "out").sum()
+        assert est == pytest.approx(ora.total_weight(0, 1000), rel=1e-5)
+
+
+class TestOneSidedError:
+    """Even with tiny fingerprints (forced collisions), HIGGS only ever
+    overestimates — the paper's one-sided error guarantee."""
+
+    def test_overestimate_only(self):
+        params = HiggsParams(d1=4, F1=4, b=2, r=2)   # brutal collisions
+        stream = make_stream(3000, 500, 2000, seed=5)
+        sk, ora = build_pair(params, stream)
+        rng = np.random.default_rng(6)
+        for ts, te in [(0, 2000), (200, 900), (1500, 1600)]:
+            q_s = rng.integers(0, 500, 128).astype(np.uint32)
+            q_d = rng.integers(0, 500, 128).astype(np.uint32)
+            est = sk.edge_query(q_s, q_d, ts, te)
+            true = ora.edge_query(q_s, q_d, ts, te)
+            assert (est >= true - 1e-4).all()
+            qv = rng.integers(0, 500, 64).astype(np.uint32)
+            for direction in ("out", "in"):
+                est = sk.vertex_query(qv, ts, te, direction)
+                true = ora.vertex_query(qv, ts, te, direction)
+                assert (est >= true - 1e-4).all()
+
+
+class TestDeletions:
+    def test_insert_then_delete_returns_zero(self):
+        src, dst, w, t = make_stream(2000, 100, 1000, seed=7)
+        sk = HiggsSketch(PARAMS_SMALL)
+        sk.insert(src, dst, w, t)
+        sk.insert(src, dst, -w, t + np.uint32(0))
+        sk.flush()
+        est = sk.edge_query(src[:64], dst[:64], 0, 1000)
+        np.testing.assert_allclose(est, 0.0, atol=1e-3)
+
+
+class TestAggregation:
+    """Aggregated (non-leaf) nodes answer full-subtree queries exactly as
+    the union of their leaves: no additional error above the leaf layer."""
+
+    def test_upper_levels_lossless(self):
+        params = HiggsParams(d1=8, F1=22, b=3, r=4, theta=4)
+        assert_no_vertex_collisions(params, 300)
+        stream = make_stream(20000, 300, 50000, seed=8)
+        sk, ora = build_pair(params, stream)
+        assert sk.pools[1].n >= 4, "want multiple aggregated levels"
+        assert sk.n_levels >= 3
+        rng = np.random.default_rng(9)
+        q_s = rng.integers(0, 300, 64).astype(np.uint32)
+        q_d = rng.integers(0, 300, 64).astype(np.uint32)
+        est = sk.edge_query(q_s, q_d, 0, 50000)      # exercises top levels
+        true = ora.edge_query(q_s, q_d, 0, 50000)
+        np.testing.assert_allclose(est, true, rtol=1e-5)
+
+    def test_path_and_subgraph(self):
+        stream = make_stream(6000, 50, 3000, seed=10)
+        sk, ora = build_pair(PARAMS_SMALL, stream)
+        path = [1, 2, 3, 4, 5]
+        assert sk.path_query(path, 100, 2500) == pytest.approx(
+            ora.path_query(path, 100, 2500), rel=1e-5)
+        edges = [(1, 2), (2, 7), (3, 9), (4, 4)]
+        assert sk.subgraph_query(edges, 0, 3000) == pytest.approx(
+            ora.subgraph_query(edges, 0, 3000), rel=1e-5)
+
+
+class TestBoundarySearch:
+    def test_cover_is_exact_partition(self):
+        params = HiggsParams(d1=4, F1=12, b=2, r=2, theta=4)
+        stream = make_stream(5000, 100, 10000, seed=11)
+        sk, _ = build_pair(params, stream)
+        starts = sk.leaf_starts
+        n1 = len(starts)
+        theta = params.theta
+        rng = np.random.default_rng(12)
+        for _ in range(50):
+            ts, te = sorted(rng.integers(0, 10000, 2).tolist())
+            plan, filtered = sk.boundary_search(ts, te)
+            # expand plan to leaf indices
+            leaves = set(filtered)
+            for level, ids in plan.items():
+                span = theta ** (level - 1)
+                for u in ids:
+                    rng_l = set(range(u * span, (u + 1) * span))
+                    assert not (rng_l & leaves), "double counted"
+                    leaves |= rng_l
+            # every leaf overlapping [ts, te] is covered, others aren't
+            for i in range(n1):
+                s, e = int(sk.leaf_starts[i]), int(sk.leaf_ends[i])
+                overlaps = not (e < ts or s > te)
+                if overlaps:
+                    assert i in leaves, f"leaf {i} [{s},{e}] missing"
+                else:
+                    inside = i in leaves
+                    assert not inside or (len(filtered) and
+                                          i in filtered), \
+                        f"leaf {i} [{s},{e}] wrongly included unfiltered"
+
+    def test_log_many_matrices(self):
+        params = HiggsParams(d1=4, F1=12, b=2, r=2, theta=4)
+        stream = make_stream(8000, 100, 100000, seed=13)
+        sk, _ = build_pair(params, stream)
+        plan, filtered = sk.boundary_search(0, 100000)
+        n_mats = len(filtered) + sum(len(v) for v in plan.values())
+        n1 = len(sk.leaf_starts)
+        assert n_mats <= 2 * (params.theta - 1) * max(
+            1, int(np.ceil(np.log(max(n1, 2)) / np.log(params.theta)))) + 2
+
+
+class TestEqualTimestampRuns:
+    def test_hot_instant_goes_to_overflow(self):
+        """A burst of identical timestamps larger than a chunk must not
+        split across leaves (key validity) — excess goes to the OB."""
+        params = HiggsParams(d1=4, F1=14, b=2, r=2)
+        cap = params.chunk_size
+        n = 3 * cap
+        rng = np.random.default_rng(14)
+        src = rng.integers(0, 50, n).astype(np.uint32)
+        dst = rng.integers(0, 50, n).astype(np.uint32)
+        w = np.ones(n, np.float32)
+        t = np.full(n, 777, np.uint32)
+        t[:cap // 2] = 5
+        t[-cap // 2:] = 900
+        t = np.sort(t)
+        sk = HiggsSketch(params)
+        ora = ExactOracle()
+        sk.insert(src, dst, w, t)
+        sk.flush()
+        ora.insert(src, dst, w, t)
+        for i in range(len(sk.leaf_starts) - 1):
+            assert sk.leaf_ends[i] <= sk.leaf_starts[i + 1], \
+                "timestamp run split across leaves"
+        est = sk.vertex_query(np.arange(50, dtype=np.uint32), 777, 777, "out")
+        true = ora.vertex_query(np.arange(50, dtype=np.uint32), 777, 777,
+                                "out")
+        assert (est >= true - 1e-4).all()
+        np.testing.assert_allclose(est.sum(), true.sum(), rtol=1e-5)

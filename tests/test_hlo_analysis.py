@@ -1,0 +1,56 @@
+"""Unit tests for the structural HLO cost model (roofline foundation)."""
+import textwrap
+
+from repro.launch import hlo_analysis as ha
+
+HLO = textwrap.dedent("""\
+    HloModule test
+
+    %wide.body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+      %p = (s32[], f32[8,128]) parameter(0)
+      %iv = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,128] get-tuple-element(%p), index=1
+      %w = f32[128,128] constant({...})
+      %dot.1 = f32[8,128]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,128]{1,0} all-reduce(%dot.1), replica_groups={}
+      ROOT %t = (s32[], f32[8,128]) tuple(%iv, %ar)
+    }
+
+    %wide.cond (p2: (s32[], f32[8,128])) -> pred[] {
+      %p2 = (s32[], f32[8,128]) parameter(0)
+      %iv2 = s32[] get-tuple-element(%p2), index=0
+      %c = s32[] constant(10)
+      ROOT %cmp = pred[] compare(%iv2, %c), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,128]) -> f32[8,128] {
+      %a = f32[8,128] parameter(0)
+      %iv0 = s32[] constant(0)
+      %tup = (s32[], f32[8,128]) tuple(%iv0, %a)
+      %loop = (s32[], f32[8,128]) while(%tup), condition=%wide.cond, body=%wide.body
+      ROOT %out = f32[8,128] get-tuple-element(%loop), index=1
+    }
+    """)
+
+
+def test_trip_count_and_dot_scaling():
+    a = ha.analyze(HLO)
+    # one dot: 2 * 8*128 * 128 flops, x 10 trips
+    assert a["flops"] == 2 * 8 * 128 * 128 * 10
+
+
+def test_collective_bytes_scaled():
+    a = ha.analyze(HLO)
+    # all-reduce operand: 8*128 f32 = 4096 B, x 10 trips
+    assert a["collectives"]["all-reduce"] == 8 * 128 * 4 * 10
+
+
+def test_roofline_terms_units():
+    a = ha.analyze(HLO)
+    t = ha.roofline_terms(a)
+    assert t["compute_s"] == a["flops"] / 197e12
+    assert t["collective_bytes"] == sum(a["collectives"].values())
+
+
+def test_shape_parsing_ignores_unknown_dtypes():
+    assert ha._shape_list("token[3,4] f32[2,2]") == [("f32", [2, 2])]

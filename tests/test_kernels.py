@@ -1,0 +1,162 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp/numpy
+oracles, swept across shapes and parameters."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cmatrix, hashing
+from repro.core.cmatrix import EMPTY, NodeState
+from repro.kernels import ops, ref
+
+
+def random_nodes(rng, m, d, b, F, t_max=1000, fill=0.5):
+    shape = (m, d, d, b)
+    occupied = rng.random(shape) < fill
+    fp_s = np.where(occupied, rng.integers(0, 1 << F, shape), EMPTY)
+    fp_d = np.where(occupied, rng.integers(0, 1 << F, shape), EMPTY)
+    w = np.where(occupied, rng.integers(1, 100, shape), 0).astype(np.float32)
+    t = rng.integers(0, t_max, shape).astype(np.uint32)
+    idx = rng.integers(0, 4, shape).astype(np.uint32)
+    return NodeState(jnp.asarray(fp_s.astype(np.uint32)),
+                     jnp.asarray(fp_d.astype(np.uint32)),
+                     jnp.asarray(w), jnp.asarray(t), jnp.asarray(idx))
+
+
+def planted_queries(rng, nodes, q, F, r, d):
+    """Half random queries, half planted to hit existing entries."""
+    fs = rng.integers(0, 1 << F, q).astype(np.uint32)
+    fd = rng.integers(0, 1 << F, q).astype(np.uint32)
+    m = nodes.fp_s.shape[0]
+    occ = np.argwhere(np.asarray(nodes.fp_s) != EMPTY)
+    for i in range(0, q, 2):
+        if len(occ) == 0:
+            break
+        mi, r_, c_, s_ = occ[rng.integers(0, len(occ))]
+        fs[i] = np.asarray(nodes.fp_s)[mi, r_, c_, s_]
+        fd[i] = np.asarray(nodes.fp_d)[mi, r_, c_, s_]
+    # candidate lists must be duplicate-free per query (full-period LCG
+    # guarantee — probe contract)
+    rows = np.stack([rng.choice(d, r, replace=False) for _ in range(q)]
+                    ).astype(np.int32)
+    cols = np.stack([rng.choice(d, r, replace=False) for _ in range(q)]
+                    ).astype(np.int32)
+    return fs, fd, rows, cols
+
+
+@pytest.mark.parametrize("m,d,b,q,r", [
+    (1, 8, 2, 4, 1),
+    (3, 16, 3, 16, 4),
+    (5, 32, 3, 8, 2),
+    (2, 64, 4, 32, 4),
+])
+@pytest.mark.parametrize("match_time", [False, True])
+def test_edge_probe_matches_ref(m, d, b, q, r, match_time):
+    rng = np.random.default_rng(d * 1000 + q + int(match_time))
+    F = 12
+    nodes = random_nodes(rng, m, d, b, F)
+    fs, fd, rows, cols = planted_queries(rng, nodes, q, F, r, d)
+    mask = rng.random(m) < 0.8
+    ts, te = 100, 700
+    got = ops.edge_probe(nodes, jnp.asarray(mask), jnp.asarray(fs),
+                         jnp.asarray(fd), jnp.asarray(rows),
+                         jnp.asarray(cols), ts, te,
+                         match_time=match_time, interpret=True)
+    want = ref.edge_probe_ref(nodes, jnp.asarray(mask), jnp.asarray(fs),
+                              jnp.asarray(fd), jnp.asarray(rows),
+                              jnp.asarray(cols), np.uint32(ts),
+                              np.uint32(te), match_time)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("m,d,b,q,r", [
+    (1, 8, 2, 4, 2),
+    (3, 16, 3, 16, 4),
+    (2, 32, 4, 8, 4),
+])
+@pytest.mark.parametrize("direction", ["out", "in"])
+@pytest.mark.parametrize("match_time", [False, True])
+def test_vertex_probe_matches_ref(m, d, b, q, r, direction, match_time):
+    rng = np.random.default_rng(d * 77 + q + int(match_time))
+    F = 10
+    nodes = random_nodes(rng, m, d, b, F)
+    fv = rng.integers(0, 1 << F, q).astype(np.uint32)
+    occ = np.argwhere(np.asarray(nodes.fp_s) != EMPTY)
+    fp = np.asarray(nodes.fp_s if direction == "out" else nodes.fp_d)
+    for i in range(0, q, 2):
+        mi, r_, c_, s_ = occ[rng.integers(0, len(occ))]
+        fv[i] = fp[mi, r_, c_, s_]
+    rows = np.stack([rng.choice(d, r, replace=False) for _ in range(q)]
+                    ).astype(np.int32)
+    mask = rng.random(m) < 0.8
+    ts, te = 200, 800
+    got = ops.vertex_probe(nodes, jnp.asarray(mask), jnp.asarray(fv),
+                           jnp.asarray(rows), ts, te, direction=direction,
+                           match_time=match_time, interpret=True)
+    want = ref.vertex_probe_ref(nodes, jnp.asarray(mask), jnp.asarray(fv),
+                                jnp.asarray(rows), np.uint32(ts),
+                                np.uint32(te), direction, match_time)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("d,b,r,n", [
+    (8, 2, 2, 50),
+    (16, 3, 4, 400),
+    (16, 3, 4, 900),     # oversubscribed -> spills
+    (32, 3, 1, 200),     # MMB disabled
+])
+def test_leaf_insert_bitwise_faithful(d, b, r, n):
+    """Kernel must reproduce the paper's sequential Alg. 1 exactly."""
+    rng = np.random.default_rng(d + n)
+    F = 14
+    hs = rng.integers(0, 1 << 32, n, dtype=np.uint64).astype(np.uint32)
+    hd = rng.integers(0, 1 << 32, n, dtype=np.uint64).astype(np.uint32)
+    # duplicate some items to exercise the merge path
+    dup = rng.integers(0, n, n // 4)
+    hs[dup], hd[dup] = hs[0], hd[0]
+    w = rng.integers(1, 9, n).astype(np.float32)
+    t = np.sort(rng.integers(0, 50, n).astype(np.uint32))
+    valid = rng.random(n) < 0.95
+    fs = hs & ((1 << F) - 1)
+    fd = hd & ((1 << F) - 1)
+    rows = np.asarray(cmatrix.chain_from_base((hs >> F) % d, r, d))
+    cols = np.asarray(cmatrix.chain_from_base((hd >> F) % d, r, d))
+
+    node0 = cmatrix.make_node(d, b)
+    got_node, got_spill = ops.leaf_insert(
+        node0, jnp.asarray(fs), jnp.asarray(fd), jnp.asarray(rows),
+        jnp.asarray(cols), jnp.asarray(w), jnp.asarray(t),
+        jnp.asarray(valid), r=r, interpret=True)
+    want_node, want_spill = ref.seq_insert_ref(
+        cmatrix.make_node(d, b), fs, fd, rows, cols, w, t, valid, b=b, r=r)
+
+    for name in NodeState._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got_node, name)),
+            np.asarray(getattr(want_node, name)), err_msg=name)
+    np.testing.assert_array_equal(np.asarray(got_spill, bool), want_spill)
+
+
+def test_insert_then_probe_roundtrip():
+    """Kernel-inserted entries must be found by the kernel probes."""
+    rng = np.random.default_rng(0)
+    d, b, r, F, n = 16, 3, 4, 14, 200
+    hs = rng.integers(0, 1 << 32, n, dtype=np.uint64).astype(np.uint32)
+    hd = rng.integers(0, 1 << 32, n, dtype=np.uint64).astype(np.uint32)
+    w = np.ones(n, np.float32)
+    t = np.arange(n, dtype=np.uint32)
+    fs, fd = hs & ((1 << F) - 1), hd & ((1 << F) - 1)
+    rows = np.asarray(cmatrix.chain_from_base((hs >> F) % d, r, d))
+    cols = np.asarray(cmatrix.chain_from_base((hd >> F) % d, r, d))
+    node, spill = ops.leaf_insert(
+        cmatrix.make_node(d, b), jnp.asarray(fs), jnp.asarray(fd),
+        jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(w),
+        jnp.asarray(t), jnp.ones(n, bool), r=r, interpret=True)
+    stacked = NodeState(*(jnp.asarray(getattr(node, f))[None]
+                          for f in NodeState._fields))
+    est = ops.edge_probe(stacked, jnp.ones(1, bool), jnp.asarray(fs),
+                         jnp.asarray(fd), jnp.asarray(rows),
+                         jnp.asarray(cols), 0, n, match_time=True,
+                         interpret=True)
+    spill = np.asarray(spill, bool)
+    assert (np.asarray(est)[~spill] >= 1.0 - 1e-6).all()

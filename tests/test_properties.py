@@ -1,0 +1,135 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cmatrix, hashing
+from repro.core.higgs import HiggsSketch
+from repro.core.oracle import ExactOracle
+from repro.core.params import HiggsParams
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@st.composite
+def streams(draw, max_n=400):
+    n = draw(st.integers(10, max_n))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    nv = draw(st.integers(2, 64))
+    t_max = draw(st.integers(2, 1000))
+    src = rng.integers(0, nv, n).astype(np.uint32)
+    dst = rng.integers(0, nv, n).astype(np.uint32)
+    w = rng.integers(1, 9, n).astype(np.float32)
+    t = np.sort(rng.integers(0, t_max, n).astype(np.uint32))
+    return src, dst, w, t, nv, t_max
+
+
+@given(streams(), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_one_sided_error_any_stream_any_range(stream, qseed):
+    """HIGGS never underestimates, for arbitrary streams and ranges."""
+    src, dst, w, t, nv, t_max = stream
+    params = HiggsParams(d1=4, F1=6, b=2, r=2)      # collision-heavy
+    sk = HiggsSketch(params)
+    ora = ExactOracle()
+    sk.insert(src, dst, w, t)
+    sk.flush()
+    ora.insert(src, dst, w, t)
+    rng = np.random.default_rng(qseed)
+    ts, te = sorted(rng.integers(0, t_max + 1, 2).tolist())
+    qs = rng.integers(0, nv, 16).astype(np.uint32)
+    qd = rng.integers(0, nv, 16).astype(np.uint32)
+    est = sk.edge_query(qs, qd, ts, te)
+    true = ora.edge_query(qs, qd, ts, te)
+    assert (est >= true - 1e-4).all()
+    ev = sk.vertex_query(qs[:8], ts, te, "out")
+    tv = ora.vertex_query(qs[:8], ts, te, "out")
+    assert (ev >= tv - 1e-4).all()
+
+
+@given(streams(max_n=300))
+@settings(**SETTINGS)
+def test_total_mass_conserved(stream):
+    """Full-range total vertex-out mass equals the exact stream weight:
+    chunked insertion + OB spill + aggregation lose nothing."""
+    src, dst, w, t, nv, _ = stream
+    params = HiggsParams(d1=4, F1=20, b=2, r=2)
+    sk = HiggsSketch(params)
+    sk.insert(src, dst, w, t)
+    sk.flush()
+    qv = np.arange(nv, dtype=np.uint32)
+    est = sk.vertex_query(qv, 0, int(t[-1]), "out").sum()
+    assert est >= w.sum() - 1e-3               # one-sided
+    # with 20-bit fingerprints over <=64 vertices, collisions add at most
+    # epsilon mass; allow 1% slack
+    assert est <= w.sum() * 1.01 + 1e-3
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4), st.integers(2, 6))
+@settings(**SETTINGS)
+def test_shift_aggregation_is_exact_rebucketing(seed, r_levels, log_d):
+    """coords_at_level is consistent: the (address, fp) pair at level l
+    jointly encodes the same hash residue as at the leaf (Alg. 2's
+    no-new-error claim)."""
+    params = HiggsParams(d1=1 << log_d, F1=19, r=4)
+    rng = np.random.default_rng(seed)
+    h = rng.integers(0, 1 << 32, 64, dtype=np.uint64).astype(np.uint32)
+    import jax.numpy as jnp
+    f1 = jnp.asarray(h & params.fp_mask)
+    base = jnp.asarray((h >> params.F1) % params.d1)
+    for level in range(1, min(r_levels + 1, params.max_levels) + 1):
+        fp_l, rows_l = cmatrix.coords_at_level(f1, base, level, params)
+        s = params.R * (level - 1)
+        # invariant: (row_l, fp_l) of chain index 0 reconstructs
+        # (base, f1) exactly
+        rows0 = np.asarray(rows_l)[:, 0]
+        fbits = rows0 & ((1 << s) - 1)
+        base_rec = rows0 >> s
+        f1_rec = (fbits.astype(np.uint64) << (params.F1 - s)) | \
+            np.asarray(fp_l)
+        np.testing.assert_array_equal(base_rec, np.asarray(base))
+        np.testing.assert_array_equal(f1_rec, np.asarray(f1))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64))
+@settings(**SETTINGS)
+def test_lcg_chain_full_period_distinct(seed, d_raw):
+    """Candidate addresses are pairwise distinct for r <= d (the probe
+    dedup contract)."""
+    d = 1 << (int(d_raw).bit_length() % 7 + 1)   # 2..128 power of two
+    r = min(4, d)
+    rng = np.random.default_rng(seed)
+    base = rng.integers(0, d, 32).astype(np.uint32)
+    chain = np.asarray(cmatrix.chain_from_base(base, r, d))
+    for row in chain:
+        assert len(set(row.tolist())) == r
+
+
+@given(streams(max_n=200))
+@settings(**SETTINGS)
+def test_deletion_cancels(stream):
+    src, dst, w, t, nv, t_max = stream
+    sk = HiggsSketch(HiggsParams(d1=4, F1=18, b=2, r=2))
+    sk.insert(src, dst, w, t)
+    sk.insert(src, dst, -w, np.full_like(t, t[-1]))
+    sk.flush()
+    qv = np.arange(nv, dtype=np.uint32)
+    est = sk.vertex_query(qv, 0, int(t[-1]), "out")
+    np.testing.assert_allclose(est, 0.0, atol=1e-3)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_compressed_psum_roundtrip(seed):
+    """int8 quantized reduction: single-participant psum == identity
+    within quantization error."""
+    import jax
+    import jax.numpy as jnp
+    from repro.runtime.compression import quantize_int8, dequantize_int8
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 3.0, (64, 33)).astype(np.float32)
+    q, s, shape, pad = quantize_int8(jnp.asarray(x))
+    back = np.asarray(dequantize_int8(q, s, shape, pad))
+    scale = np.abs(x).reshape(-1)
+    err = np.abs(back - x)
+    assert err.max() <= np.abs(x).max() / 127.0 + 1e-6

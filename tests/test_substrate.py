@@ -1,0 +1,148 @@
+"""Training-substrate tests: checkpointing (incl. elastic resharding),
+fault-tolerance runtime, optimizer, data pipeline resume, gradient
+compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.optim import AdamW, cosine_schedule
+from repro.runtime import PreemptionGuard, StragglerMonitor
+from repro.runtime.compression import compressed_psum
+from repro.stream.pipeline import (StreamPipeline, token_transition_stream,
+                                   expert_coactivation_stream)
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(12.0).reshape(3, 4),
+                "b": [jnp.ones((2,), jnp.int32),
+                      {"c": jnp.zeros((5,), jnp.bfloat16)}]}
+        d = str(tmp_path)
+        ckpt.save_checkpoint(d, 7, tree, {"note": "x"})
+        assert ckpt.latest_step(d) == 7
+        like = jax.tree.map(jnp.zeros_like, tree)
+        got, meta = ckpt.restore_checkpoint(d, 7, like)
+        assert meta["note"] == "x"
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    def test_atomic_overwrite_and_latest(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save_checkpoint(d, 1, {"x": jnp.zeros(3)})
+        ckpt.save_checkpoint(d, 5, {"x": jnp.ones(3)})
+        assert ckpt.latest_step(d) == 5
+        got, _ = ckpt.restore_checkpoint(d, 5, {"x": jnp.zeros(3)})
+        np.testing.assert_array_equal(np.asarray(got["x"]), 1.0)
+
+    def test_elastic_reshard_restore(self, tmp_path):
+        """Restore onto a different mesh: the elastic-scaling path."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        d = str(tmp_path)
+        tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+        ckpt.save_checkpoint(d, 3, tree)
+        mesh = jax.make_mesh((1, 1), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        sh = {"w": NamedSharding(mesh, P("data", "model"))}
+        got, _ = ckpt.restore_checkpoint(d, 3, tree, shardings=sh)
+        assert got["w"].sharding == sh["w"]
+        np.testing.assert_array_equal(np.asarray(got["w"]),
+                                      np.asarray(tree["w"]))
+
+    def test_missing_leaf_raises(self, tmp_path):
+        d = str(tmp_path)
+        ckpt.save_checkpoint(d, 1, {"x": jnp.zeros(3)})
+        with pytest.raises(KeyError):
+            ckpt.restore_checkpoint(d, 1, {"y": jnp.zeros(3)})
+
+
+class TestFaultRuntime:
+    def test_preemption_guard_flow(self):
+        flushed = []
+        g = PreemptionGuard(on_preempt=lambda: flushed.append(1),
+                            install=False)
+        assert not g.should_stop
+        g.request_stop()
+        assert g.should_stop and flushed == [1]
+
+    def test_straggler_detection_and_rebalance(self):
+        mon = StragglerMonitor(threshold=2.0, window=4)
+        for step in range(8):
+            for h in ("h0", "h1", "h2", "h3"):
+                mon.record(h, 1.0 if h != "h2" else 5.0)
+        assert mon.stragglers() == ["h2"]
+        mon.evict("h2")
+        assert "h2" not in mon.active_hosts()
+        shards = mon.rebalanced_shards(8)
+        assert sorted(sum(shards.values(), [])) == list(range(8))
+        assert all(len(v) >= 2 for v in shards.values())
+        assert not mon.needs_elastic_restart()    # 3/4 alive = 0.75
+        mon.evict("h1")
+        assert mon.needs_elastic_restart()
+
+
+class TestOptimizer:
+    def test_adamw_converges_quadratic(self):
+        opt = AdamW(lr=0.1, weight_decay=0.0)
+        params = {"w": jnp.array([3.0, -2.0])}
+        state = opt.init(params)
+        for _ in range(200):
+            grads = {"w": params["w"]}           # d/dw 0.5 w^2
+            upd, state, _ = opt.update(grads, state, params)
+            params = jax.tree.map(lambda p, u: p + u, params, upd)
+        assert float(jnp.abs(params["w"]).max()) < 0.05
+
+    def test_cosine_schedule_shape(self):
+        lr = cosine_schedule(1.0, warmup=10, total=100)
+        assert float(lr(0)) == 0.0
+        assert float(lr(10)) == pytest.approx(1.0, abs=0.02)
+        assert float(lr(100)) == pytest.approx(0.0, abs=1e-3)
+
+
+class TestPipeline:
+    def test_resume_cursor(self, tmp_path):
+        n = 100
+        arrs = [np.arange(n, dtype=np.uint32)] * 2 + \
+            [np.ones(n, np.float32), np.arange(n, dtype=np.uint32)]
+        pipe = StreamPipeline(*arrs, batch=30)
+        batches = iter(pipe)
+        next(batches)
+        path = os.path.join(str(tmp_path), "cursor.json")
+        pipe.save_cursor(path)
+        pipe2 = StreamPipeline(*arrs, batch=30)
+        pipe2.restore_cursor(path)
+        rest = list(pipe2)
+        assert sum(len(b[0]) for b in rest) == n - 30
+
+    def test_token_transition_stream(self):
+        toks = np.array([[1, 2, 3], [4, 5, 6]])
+        src, dst, w, t = token_transition_stream(toks, step=9)
+        assert src.tolist() == [1, 2, 4, 5]
+        assert dst.tolist() == [2, 3, 5, 6]
+        assert (t == 9).all()
+
+    def test_expert_coactivation_stream(self):
+        e = np.array([[0, 3], [1, 2]])
+        src, dst, w, t = expert_coactivation_stream(e, step=4)
+        pairs = set(zip(src.tolist(), dst.tolist()))
+        assert (0, 3) in pairs and (3, 0) in pairs and (1, 2) in pairs
+
+
+class TestCompression:
+    def test_compressed_psum_single_rank_identity(self):
+        mesh = jax.make_mesh((1,), ("pod",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        x = jnp.asarray(np.random.default_rng(0).normal(
+            0, 2.0, (32, 17)).astype(np.float32))
+
+        fn = jax.shard_map(
+            lambda v: compressed_psum(v, "pod"), mesh=mesh,
+            in_specs=jax.sharding.PartitionSpec(),
+            out_specs=jax.sharding.PartitionSpec(), check_vma=False)
+        out = np.asarray(jax.jit(fn)(x))
+        err = np.abs(out - np.asarray(x))
+        assert err.max() <= np.abs(np.asarray(x)).max() / 127 + 1e-6
