@@ -14,12 +14,21 @@ import time
 
 import numpy as np
 
-from repro.core.baselines import AuxoTime, Horae, PGSS
-from repro.core.higgs import HiggsSketch
+from repro.api import GraphSummary, make_summary
 from repro.core.oracle import ExactOracle
 from repro.core.params import HiggsParams
 
 ROWS: list[str] = []
+
+# registry kwargs for the benchmark-default configurations
+DEFAULT_KW: dict[str, dict] = {
+    "HIGGS": dict(d1=16, F1=19),
+    "Horae": dict(d=96, b=4),
+    "Horae-cpt": dict(d=96, b=4),
+    "PGSS": dict(m=1 << 17),
+    "AuxoTime": dict(d=48, b=4),
+    "AuxoTime-cpt": dict(d=48, b=4),
+}
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
@@ -40,20 +49,18 @@ def build_all(stream, l_bits: int, include=("HIGGS", "Horae", "Horae-cpt",
                                             "PGSS", "AuxoTime",
                                             "AuxoTime-cpt"),
               higgs_params: HiggsParams | None = None):
-    """Returns dict name -> (sketch, insert_seconds)."""
-    out = {}
-    factories = {
-        "HIGGS": lambda: HiggsSketch(higgs_params or
-                                     HiggsParams(d1=16, F1=19)),
-        "Horae": lambda: Horae(l_bits=l_bits, d=96, b=4),
-        "Horae-cpt": lambda: Horae(l_bits=l_bits, d=96, b=4, cpt=True),
-        "PGSS": lambda: PGSS(l_bits=l_bits, m=1 << 17),
-        "AuxoTime": lambda: AuxoTime(l_bits=l_bits, d=48, b=4),
-        "AuxoTime-cpt": lambda: AuxoTime(l_bits=l_bits, d=48, b=4,
-                                         cpt=True),
-    }
+    """Returns dict name -> (summary, insert_seconds).  Summaries come
+    from the ``make_summary`` registry, so any registered method can be
+    benchmarked by adding its name (and default kwargs) here."""
+    out: dict[str, tuple[GraphSummary, float]] = {}
     for name in include:
-        sk = factories[name]()
+        kw = dict(DEFAULT_KW.get(name, {}))
+        if name == "HIGGS":
+            if higgs_params is not None:
+                kw = dict(params=higgs_params)
+        else:
+            kw["l_bits"] = l_bits
+        sk = make_summary(name, **kw)
         t0 = time.perf_counter()
         sk.insert(*stream)
         sk.flush()

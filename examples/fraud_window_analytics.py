@@ -10,10 +10,7 @@ size against Horae on the same stream.
 """
 import numpy as np
 
-from repro.core.baselines import Horae
-from repro.core.higgs import HiggsSketch
-from repro.core.oracle import ExactOracle
-from repro.core.params import HiggsParams
+from repro.api import SubgraphQuery, make_summary
 from repro.stream.generator import power_law_stream
 
 
@@ -36,23 +33,28 @@ def main():
     src, dst, w, t = src[order], dst[order], w[order], t[order]
 
     sketches = {
-        "HIGGS": HiggsSketch(HiggsParams(d1=16, F1=19)),
-        "Horae": Horae(l_bits=17, d=96, b=4),
+        "HIGGS": make_summary("higgs", d1=16, F1=19),
+        "Horae": make_summary("horae", l_bits=17, d=96, b=4),
     }
-    oracle = ExactOracle()
+    oracle = make_summary("oracle")
     for sk in sketches.values():
         sk.insert(src, dst, w, t)
         sk.flush()
     oracle.insert(src, dst, w, t)
 
+    # both windows go out as ONE typed batch per summary; HIGGS plans each
+    # distinct range once and probes each (level, range class) once
     windows = {"night (ring active)": (0, 14_399),
                "workday": (32_400, 61_199)}
-    for wname, (ts, te) in windows.items():
-        true = oracle.subgraph_query(ring_edges, ts, te)
-        print(f"\nring flow during {wname}: exact={true:,.0f}")
+    batch = [SubgraphQuery(ring_edges, ts, te)
+             for ts, te in windows.values()]
+    true = oracle.query(batch).values
+    results = {name: sk.query(batch) for name, sk in sketches.items()}
+    for i, wname in enumerate(windows):
+        print(f"\nring flow during {wname}: exact={true[i]:,.0f}")
         for name, sk in sketches.items():
-            est = sk.subgraph_query(ring_edges, ts, te)
-            err = abs(est - true) / max(true, 1)
+            est = results[name].values[i]
+            err = abs(est - true[i]) / max(true[i], 1)
             print(f"  {name:6s}: {est:,.0f}  (rel err {err:.2%}, "
                   f"summary {sk.space_bytes() / 1e6:.1f} MB)")
 

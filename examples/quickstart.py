@@ -1,14 +1,15 @@
-"""Quickstart: summarize a graph stream with HIGGS and run every TRQ
-primitive, compared against the exact oracle.
+"""Quickstart: summarize a graph stream with HIGGS and answer a mixed
+batch of typed temporal-range queries in one call, compared against the
+exact oracle.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core.higgs import HiggsSketch
-from repro.core.oracle import ExactOracle
-from repro.core.params import HiggsParams
+from repro.api import (EdgeQuery, PathQuery, SubgraphQuery, VertexQuery,
+                       make_summary)
 from repro.stream.generator import lkml_like_stream
+from repro.stream.pipeline import StreamPipeline
 
 
 def main():
@@ -17,11 +18,10 @@ def main():
     print(f"stream: {len(src)} edges, {src.max() + 1} vertices, "
           f"time span {t[-1]}")
 
-    sketch = HiggsSketch(HiggsParams(d1=16, F1=19, b=3, r=4))
-    oracle = ExactOracle()
-    sketch.insert(src, dst, w, t)
-    sketch.flush()
-    oracle.insert(src, dst, w, t)
+    # any registered summary builds the same way; try "horae" or "pgss"
+    pipe = StreamPipeline(src, dst, w, t)
+    sketch = pipe.feed_summary("higgs", d1=16, F1=19, b=3, r=4)
+    oracle = StreamPipeline(src, dst, w, t).feed_summary("oracle")
     print(f"HIGGS: {len(sketch.leaf_starts)} leaves, "
           f"{sketch.n_levels} levels, "
           f"{sketch.space_bytes() / 1e6:.2f} MB, "
@@ -30,30 +30,35 @@ def main():
     ts, te = int(t[len(t) // 4]), int(t[len(t) // 2])
     print(f"\nTRQ range [{ts}, {te}]:")
 
-    # edge queries
-    qs, qd = src[:5].astype(np.uint32), dst[:5].astype(np.uint32)
-    est = sketch.edge_query(qs, qd, ts, te)
-    true = oracle.edge_query(qs, qd, ts, te)
+    # one typed batch carrying every TRQ primitive; the planner runs
+    # boundary search once and one device probe per (level, range class)
+    batch = [
+        EdgeQuery(src[:5], dst[:5], ts, te),
+        VertexQuery(src[:3], ts, te, "out"),
+        PathQuery([int(src[0]), int(dst[0]), int(dst[1])], ts, te),
+        SubgraphQuery([(int(src[i]), int(dst[i])) for i in range(8)],
+                      ts, te),
+    ]
+    est = sketch.query(batch)
+    true = oracle.query(batch)
+
+    edges_est, verts_est, path_est, sub_est = est.values
+    edges_true, verts_true, path_true, sub_true = true.values
     for i in range(5):
-        print(f"  edge {qs[i]}->{qd[i]}: HIGGS={est[i]:.0f} "
-              f"exact={true[i]:.0f}")
-
-    # vertex queries
-    qv = src[:3].astype(np.uint32)
-    ev = sketch.vertex_query(qv, ts, te, "out")
-    tv = oracle.vertex_query(qv, ts, te, "out")
+        print(f"  edge {src[i]}->{dst[i]}: HIGGS={edges_est[i]:.0f} "
+              f"exact={edges_true[i]:.0f}")
     for i in range(3):
-        print(f"  vertex {qv[i]} (out): HIGGS={ev[i]:.0f} "
-              f"exact={tv[i]:.0f}")
+        print(f"  vertex {src[i]} (out): HIGGS={verts_est[i]:.0f} "
+              f"exact={verts_true[i]:.0f}")
+    print(f"  path (3 vertices): HIGGS={path_est:.0f} exact={path_true:.0f}")
+    print(f"  subgraph (8 edges): HIGGS={sub_est:.0f} exact={sub_true:.0f}")
 
-    # path + subgraph queries
-    path = [int(src[0]), int(dst[0]), int(dst[1])]
-    print(f"  path {path}: HIGGS={sketch.path_query(path, ts, te):.0f} "
-          f"exact={oracle.path_query(path, ts, te):.0f}")
-    edges = [(int(src[i]), int(dst[i])) for i in range(8)]
-    print(f"  subgraph({len(edges)} edges): "
-          f"HIGGS={sketch.subgraph_query(edges, ts, te):.0f} "
-          f"exact={oracle.subgraph_query(edges, ts, te):.0f}")
+    s = est.stats
+    print(f"\nplanner stats: {s.n_queries} queries, "
+          f"{s.boundary_searches} boundary search(es), "
+          f"{s.plan_cache_hits} plan-cache hit(s), "
+          f"{s.device_dispatches} device dispatches, "
+          f"{s.buckets_probed} buckets probed")
 
 
 if __name__ == "__main__":

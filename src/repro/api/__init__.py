@@ -1,0 +1,25 @@
+"""Unified query API for graph-stream summaries.
+
+* :mod:`repro.api.queries` — typed, batched query descriptions
+  (``EdgeQuery``/``VertexQuery``/``PathQuery``/``SubgraphQuery``) and the
+  ``QueryResult``/``QueryStats`` return types.
+* :mod:`repro.api.protocol` — the formal ``GraphSummary`` protocol plus the
+  pointwise/batched adapter mixins.
+* :mod:`repro.api.planner` — the batched query-plan engine for HIGGS.
+* :mod:`repro.api.registry` — ``make_summary(name, **kw)``.
+"""
+from repro.api.planner import QueryPlanner
+from repro.api.protocol import (GraphSummary, LegacyQueryMixin,
+                                PointwiseQueryMixin)
+from repro.api.queries import (EdgeQuery, PathQuery, Query, QueryBatch,
+                               QueryResult, QueryStats, SubgraphQuery,
+                               VertexQuery)
+from repro.api.registry import available_summaries, make_summary, register
+
+__all__ = [
+    "EdgeQuery", "VertexQuery", "PathQuery", "SubgraphQuery",
+    "Query", "QueryBatch", "QueryResult", "QueryStats",
+    "GraphSummary", "LegacyQueryMixin", "PointwiseQueryMixin",
+    "QueryPlanner",
+    "make_summary", "register", "available_summaries",
+]

@@ -1,0 +1,237 @@
+"""Batched query-plan engine for the HIGGS sketch.
+
+The legacy surface executed every query independently: one boundary search
+per call, then one device dispatch per tree level — so a 64-path compound
+workload with a shared time range paid 64x the planning and 64x the device
+round-trips.  The planner restores the paper's locality argument at the
+batch level:
+
+1. Lower the batch: Edge/Path/Subgraph queries become slices of one
+   concatenated (src, dst) edge batch per distinct ``[ts, te]`` range
+   (a *time-range class*); VertexQuery batches group by (range, direction).
+2. Plan once per range class: ``boundary_search`` runs once per distinct
+   range, and its (plan, filtered) decomposition is memoized across
+   ``query()`` calls until the next insertion mutates the tree.
+3. Probe once per (level, range class): one pool gather + one probe kernel
+   launch covers every query coordinate in the class, then per-query
+   results are scattered back and reduced (sum for Path/Subgraph).
+
+``QueryStats.device_dispatches`` counts the launches, making the
+<= 1-per-(level, range-class) contract checkable by tests.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.api.queries import (EDGE_LOWERED, QueryBatch, QueryResult,
+                               QueryStats, VertexQuery)
+from repro.core import cmatrix
+from repro.core.cmatrix import pow2_pad as _pow2_pad
+
+if TYPE_CHECKING:  # avoid a circular import; higgs imports this module
+    from repro.core.higgs import HiggsSketch
+
+
+class QueryPlanner:
+    """Executes typed query batches against one :class:`HiggsSketch`."""
+
+    # memoized plans are tiny, but a read-only phase serving arbitrarily
+    # many distinct ranges must not grow memory without bound
+    MAX_CACHED_PLANS = 1024
+
+    def __init__(self, sketch: "HiggsSketch"):
+        self.sketch = sketch
+        self.lifetime = QueryStats()       # accumulated across executions
+        self._plan_cache: dict[tuple[int, int], tuple[dict, list]] = {}
+        self._cache_version = -1
+
+    # ------------------------------------------------------------------
+    # planning
+    # ------------------------------------------------------------------
+
+    def plan(self, ts: int, te: int, stats: QueryStats):
+        """Memoized boundary search; invalidated when the tree mutates."""
+        version = self.sketch.structure_version
+        if version != self._cache_version:
+            self._plan_cache.clear()
+            self._cache_version = version
+        key = (int(ts), int(te))
+        cached = self._plan_cache.get(key)
+        if cached is None:
+            cached = self.sketch.boundary_search(ts, te)
+            if len(self._plan_cache) >= self.MAX_CACHED_PLANS:
+                self._plan_cache.pop(next(iter(self._plan_cache)))
+            self._plan_cache[key] = cached
+            stats.boundary_searches += 1
+        else:
+            stats.plan_cache_hits += 1
+        return cached
+
+    # ------------------------------------------------------------------
+    # execution
+    # ------------------------------------------------------------------
+
+    def execute(self, queries: QueryBatch) -> QueryResult:
+        stats = QueryStats(n_queries=len(queries))
+        values: list = [None] * len(queries)
+
+        # lower: group by time-range class (and direction for vertices)
+        edge_groups: dict[tuple[int, int], list] = {}
+        vertex_groups: dict[tuple[int, int, str], list] = {}
+        for qi, q in enumerate(queries):
+            if isinstance(q, EDGE_LOWERED):
+                src, dst = q.edge_arrays()
+                edge_groups.setdefault((q.ts, q.te), []).append(
+                    (qi, src, dst))
+            elif isinstance(q, VertexQuery):
+                vertex_groups.setdefault((q.ts, q.te, q.direction),
+                                         []).append((qi, q.v))
+            else:
+                raise TypeError(
+                    f"unsupported query type: {type(q).__name__}")
+
+        for (ts, te), jobs in edge_groups.items():
+            src = np.concatenate([s for _, s, _ in jobs])
+            dst = np.concatenate([d for _, _, d in jobs])
+            out = self._edge_batch(src, dst, ts, te, stats)
+            off = 0
+            for qi, s, _ in jobs:
+                values[qi] = queries[qi].reduce(out[off:off + len(s)])
+                off += len(s)
+
+        for (ts, te, direction), jobs in vertex_groups.items():
+            v = np.concatenate([x for _, x in jobs])
+            out = self._vertex_batch(v, ts, te, direction, stats)
+            off = 0
+            for qi, x in jobs:
+                values[qi] = queries[qi].reduce(out[off:off + len(x)])
+                off += len(x)
+
+        self.lifetime.merge(stats)
+        return QueryResult(values, stats)
+
+    # ------------------------------------------------------------------
+    # batched probes: one gather + one kernel launch per (level, class)
+    # ------------------------------------------------------------------
+
+    def _edge_batch(self, src, dst, ts, te, stats: QueryStats) -> np.ndarray:
+        sk = self.sketch
+        out = np.zeros((len(src),), np.float64)
+        if len(src) == 0:
+            return out
+        f1s, bs = sk._query_coords(src, "s")
+        f1d, bd = sk._query_coords(dst, "d")
+        plan, filtered = self.plan(ts, te, stats)
+        for level, ids in sorted(plan.items()):
+            out += self._probe_level_edge(level, np.asarray(ids), f1s, bs,
+                                          f1d, bd, ts, te, False, stats)
+            out += self._ob_edge(level, ids, f1s, bs, f1d, bd, ts, te,
+                                 False, stats)
+        if filtered:
+            out += self._probe_level_edge(1, np.asarray(filtered), f1s, bs,
+                                          f1d, bd, ts, te, True, stats)
+            out += self._ob_edge(1, filtered, f1s, bs, f1d, bd, ts, te,
+                                 True, stats)
+        return out
+
+    def _vertex_batch(self, v, ts, te, direction,
+                      stats: QueryStats) -> np.ndarray:
+        sk = self.sketch
+        out = np.zeros((len(v),), np.float64)
+        if len(v) == 0:
+            return out
+        side = "s" if direction == "out" else "d"
+        f1, base = sk._query_coords(v, side)
+        plan, filtered = self.plan(ts, te, stats)
+        for level, ids in sorted(plan.items()):
+            out += self._probe_level_vertex(level, np.asarray(ids), f1, base,
+                                            ts, te, direction, False, stats)
+            out += self._ob_vertex(level, ids, f1, base, ts, te, direction,
+                                   False, stats)
+        if filtered:
+            out += self._probe_level_vertex(1, np.asarray(filtered), f1,
+                                            base, ts, te, direction, True,
+                                            stats)
+            out += self._ob_vertex(1, filtered, f1, base, ts, te, direction,
+                                   True, stats)
+        return out
+
+    # -- device probes ---------------------------------------------------
+
+    def _probe_level_edge(self, level, ids, f1s, bs, f1d, bd, ts, te,
+                          filter_time, stats: QueryStats):
+        sk = self.sketch
+        if len(ids) == 0 or level > len(sk.pools) or \
+                sk.pools[level - 1].n == 0:
+            return 0.0
+        p = sk.params
+        r = p.r if p.use_mmb else 1
+        stats.device_dispatches += 1
+        stats.buckets_probed += len(ids) * r * r * len(np.asarray(f1s))
+        nodes, mask = sk.pools[level - 1].gather(ids, _pow2_pad(len(ids)))
+        fs_l, rows = cmatrix.coords_at_level(f1s, bs, level, p)
+        fd_l, cols = cmatrix.coords_at_level(f1d, bd, level, p)
+        res = cmatrix.probe_edge(nodes, mask, fs_l, fd_l, rows, cols,
+                                 np.uint32(ts), np.uint32(te),
+                                 match_time=filter_time)
+        return np.asarray(res, np.float64)
+
+    def _probe_level_vertex(self, level, ids, f1, base, ts, te, direction,
+                            filter_time, stats: QueryStats):
+        sk = self.sketch
+        if len(ids) == 0 or level > len(sk.pools) or \
+                sk.pools[level - 1].n == 0:
+            return 0.0
+        p = sk.params
+        r = p.r if p.use_mmb else 1
+        stats.device_dispatches += 1
+        stats.buckets_probed += len(ids) * r * p.d(level) * \
+            len(np.asarray(f1))
+        nodes, mask = sk.pools[level - 1].gather(ids, _pow2_pad(len(ids)))
+        f_l, rows = cmatrix.coords_at_level(f1, base, level, p)
+        res = cmatrix.probe_vertex(nodes, mask, f_l, rows, np.uint32(ts),
+                                   np.uint32(te), direction=direction,
+                                   match_time=filter_time)
+        return np.asarray(res, np.float64)
+
+    # -- host-side overflow-block probes ---------------------------------
+
+    def _ob_edge(self, level, ids, f1s, bs, f1d, bd, ts, te, filter_time,
+                 stats: QueryStats):
+        ob = self.sketch.ob
+        f1s, bs = np.asarray(f1s), np.asarray(bs)
+        f1d, bd = np.asarray(f1d), np.asarray(bd)
+        out = np.zeros((len(f1s),), np.float64)
+        for nid in ids:
+            rec = ob.get(level, int(nid))
+            if not rec:
+                continue
+            stats.ob_probes += 1
+            tok = np.ones(len(rec["w"]), bool) if not filter_time else \
+                (rec["t"] >= ts) & (rec["t"] <= te)
+            m = (rec["f1s"][None, :] == f1s[:, None]) & \
+                (rec["f1d"][None, :] == f1d[:, None]) & \
+                (rec["bs"][None, :] == bs[:, None]) & \
+                (rec["bd"][None, :] == bd[:, None]) & tok[None, :]
+            out += (m * rec["w"][None, :]).sum(axis=1)
+        return out
+
+    def _ob_vertex(self, level, ids, f1, base, ts, te, direction,
+                   filter_time, stats: QueryStats):
+        ob = self.sketch.ob
+        f1, base = np.asarray(f1), np.asarray(base)
+        fk, bk = ("f1s", "bs") if direction == "out" else ("f1d", "bd")
+        out = np.zeros((len(f1),), np.float64)
+        for nid in ids:
+            rec = ob.get(level, int(nid))
+            if not rec:
+                continue
+            stats.ob_probes += 1
+            tok = np.ones(len(rec["w"]), bool) if not filter_time else \
+                (rec["t"] >= ts) & (rec["t"] <= te)
+            m = (rec[fk][None, :] == f1[:, None]) & \
+                (rec[bk][None, :] == base[:, None]) & tok[None, :]
+            out += (m * rec["w"][None, :]).sum(axis=1)
+        return out

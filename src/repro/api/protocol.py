@@ -1,0 +1,98 @@
+"""The ``GraphSummary`` protocol every summary implements, plus the two
+adapter mixins that bridge the batched and pointwise query surfaces.
+
+* :class:`GraphSummary` — the formal structural type: ``insert``/``flush``/
+  ``query``/``space_bytes``.  ``HiggsSketch``, all baselines, and the exact
+  oracle satisfy it, so harness code (benchmarks, examples, the stream
+  pipeline) is written once against this protocol.
+* :class:`PointwiseQueryMixin` — implements ``query()`` on top of native
+  ``edge_query``/``vertex_query`` methods.  Used by the host-side baselines
+  and the oracle, where per-query dispatch has no device round-trip to
+  amortize.  Also derives ``path_query``/``subgraph_query`` from ``query()``.
+* :class:`LegacyQueryMixin` — the inverse: keeps the legacy per-method API
+  alive as thin shims over ``query()``.  Used by ``HiggsSketch``, whose
+  ``query()`` is the batched planner; the shims are guaranteed to return
+  values identical to the batched path because they *are* the batched path
+  with a single-element batch.
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.api.queries import (EDGE_LOWERED, EdgeQuery, PathQuery, Query,
+                               QueryBatch, QueryResult, QueryStats,
+                               SubgraphQuery, VertexQuery)
+
+
+@runtime_checkable
+class GraphSummary(Protocol):
+    """A graph-stream summary: ingest a stream, answer typed query batches,
+    report its space footprint."""
+
+    name: str
+
+    def insert(self, src, dst, w, t) -> None:
+        """Insert a batch of (src, dst, weight, timestamp) stream items."""
+        ...
+
+    def flush(self) -> None:
+        """Finalize pending state (end of stream / snapshot point)."""
+        ...
+
+    def query(self, queries: QueryBatch) -> QueryResult:
+        """Answer a batch of typed queries."""
+        ...
+
+    def space_bytes(self) -> float:
+        """Summary size in bytes per the paper's accounting."""
+        ...
+
+
+def _dispatch_pointwise(summary, q: Query):
+    if isinstance(q, EdgeQuery):
+        return np.asarray(summary.edge_query(q.src, q.dst, q.ts, q.te),
+                          np.float64)
+    if isinstance(q, VertexQuery):
+        return np.asarray(summary.vertex_query(q.v, q.ts, q.te, q.direction),
+                          np.float64)
+    if isinstance(q, (PathQuery, SubgraphQuery)):
+        src, dst = q.edge_arrays()
+        if len(src) == 0:
+            return q.reduce(np.zeros((0,), np.float64))
+        return q.reduce(np.asarray(summary.edge_query(src, dst, q.ts, q.te),
+                                   np.float64))
+    raise TypeError(f"unsupported query type: {type(q).__name__}")
+
+
+class _CompoundShims:
+    """Compound queries as single-element batches over ``query()``."""
+
+    def path_query(self, path_vertices, ts: int, te: int) -> float:
+        return self.query([PathQuery(path_vertices, ts, te)]).values[0]
+
+    def subgraph_query(self, edges, ts: int, te: int) -> float:
+        return self.query([SubgraphQuery(edges, ts, te)]).values[0]
+
+
+class PointwiseQueryMixin(_CompoundShims):
+    """``query()`` for summaries whose native surface is per-kind methods."""
+
+    def query(self, queries: QueryBatch) -> QueryResult:
+        stats = QueryStats(n_queries=len(queries))
+        p0 = getattr(self, "probe_counter", 0)
+        values = [_dispatch_pointwise(self, q) for q in queries]
+        stats.buckets_probed = getattr(self, "probe_counter", 0) - p0
+        return QueryResult(values, stats)
+
+
+class LegacyQueryMixin(_CompoundShims):
+    """Legacy per-method API as thin shims over batched ``query()``."""
+
+    def edge_query(self, src, dst, ts: int, te: int) -> np.ndarray:
+        return self.query([EdgeQuery(src, dst, ts, te)]).values[0]
+
+    def vertex_query(self, v, ts: int, te: int,
+                     direction: str = "out") -> np.ndarray:
+        return self.query([VertexQuery(v, ts, te, direction)]).values[0]

@@ -1,0 +1,104 @@
+"""Summary registry: ``make_summary(name, **kw)`` builds any registered
+:class:`~repro.api.protocol.GraphSummary` by name.
+
+Benchmarks, examples, and the stream pipeline construct summaries through
+this registry so a new method plugs into every harness by registering one
+factory.  Imports of the concrete implementations are lazy to keep
+``repro.api`` import-light and cycle-free (``repro.core.higgs`` itself
+imports the planner from this package).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.api.protocol import GraphSummary
+
+_REGISTRY: Dict[str, Callable[..., GraphSummary]] = {}
+
+
+def _norm(name: str) -> str:
+    return name.lower().replace("_", "-")
+
+
+def register(name: str, factory: Callable[..., GraphSummary]) -> None:
+    """Register a summary factory under a (case-insensitive) name."""
+    _REGISTRY[_norm(name)] = factory
+
+
+def available_summaries() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def make_summary(name: str, **kw) -> GraphSummary:
+    """Instantiate a registered summary.  Keyword arguments go to the
+    factory (e.g. ``make_summary("higgs", d1=16, F1=19)`` or
+    ``make_summary("horae", l_bits=12, cpt=True)``)."""
+    key = _norm(name)
+    if key not in _REGISTRY:
+        raise KeyError(f"unknown summary {name!r}; "
+                       f"available: {', '.join(available_summaries())}")
+    return _REGISTRY[key](**kw)
+
+
+def _make_higgs(**kw):
+    from repro.core.higgs import HiggsSketch
+    from repro.core.params import HiggsParams
+    params = kw.pop("params", None)
+    if params is None:
+        params = HiggsParams(**kw)
+    elif kw:
+        raise TypeError("pass either params= or HiggsParams fields, not both")
+    return HiggsSketch(params)
+
+
+def _make_tcm(**kw):
+    from repro.core.baselines import TCM
+    return TCM(**kw)
+
+
+def _force_cpt(name: str, kw: dict) -> dict:
+    """The ``*-cpt`` aliases imply cpt=True; an explicit contradictory
+    flag is a caller error, not something to silently override."""
+    if not kw.setdefault("cpt", True):
+        raise ValueError(f"{name!r} implies cpt=True; "
+                         f"use {name.removesuffix('-cpt')!r} instead")
+    return kw
+
+
+def _make_horae(**kw):
+    from repro.core.baselines import Horae
+    return Horae(**kw)
+
+
+def _make_horae_cpt(**kw):
+    return _make_horae(**_force_cpt("horae-cpt", kw))
+
+
+def _make_pgss(**kw):
+    from repro.core.baselines import PGSS
+    return PGSS(**kw)
+
+
+def _make_auxotime(**kw):
+    from repro.core.baselines import AuxoTime
+    return AuxoTime(**kw)
+
+
+def _make_auxotime_cpt(**kw):
+    return _make_auxotime(**_force_cpt("auxotime-cpt", kw))
+
+
+def _make_oracle(**kw):
+    from repro.core.oracle import ExactOracle
+    return ExactOracle(**kw)
+
+
+register("higgs", _make_higgs)
+register("tcm", _make_tcm)
+register("horae", _make_horae)
+register("horae-cpt", _make_horae_cpt)
+register("pgss", _make_pgss)
+register("auxotime", _make_auxotime)
+register("auxotime-cpt", _make_auxotime_cpt)
+register("oracle", _make_oracle)
+register("exact", _make_oracle)

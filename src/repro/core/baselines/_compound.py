@@ -1,15 +1,13 @@
-"""Shared path/subgraph query composition for baseline sketches
-(paper Sec. III: compound queries decompose into edge queries)."""
-import numpy as np
+"""Batched-query surface for the baseline sketches.
+
+Baselines natively expose per-kind ``edge_query``/``vertex_query``; the
+:class:`~repro.api.protocol.PointwiseQueryMixin` builds the protocol's
+``query()`` on top of those and derives the compound queries (path /
+subgraph decompose into edge queries, paper Sec. III).  The old name is
+kept so the baseline class definitions read the same.
+"""
+from repro.api.protocol import PointwiseQueryMixin
 
 
-class CompoundQueryMixin:
-    def path_query(self, path_vertices, ts: int, te: int) -> float:
-        srcs = np.asarray(path_vertices[:-1], np.uint32)
-        dsts = np.asarray(path_vertices[1:], np.uint32)
-        return float(np.sum(self.edge_query(srcs, dsts, ts, te)))
-
-    def subgraph_query(self, edges, ts: int, te: int) -> float:
-        srcs = np.asarray([e[0] for e in edges], np.uint32)
-        dsts = np.asarray([e[1] for e in edges], np.uint32)
-        return float(np.sum(self.edge_query(srcs, dsts, ts, te)))
+class CompoundQueryMixin(PointwiseQueryMixin):
+    pass

@@ -35,6 +35,12 @@ _A = 5   # LCG multiplier (a % 4 == 1 -> full period mod 2^k)
 _C = 1   # LCG increment (odd)
 
 
+def pow2_pad(n: int, lo: int = 8) -> int:
+    """Next power of two >= n (floor lo) — shared pad policy for chunk
+    buffers and pool gathers; insertion and probes must agree on it."""
+    return max(lo, 1 << max(0, (n - 1).bit_length()))
+
+
 def lcg_tables(r: int, d: int):
     """Closed-form LCG coefficients: x_k = A_k * x_0 + B_k (mod d)."""
     A, B = [], []

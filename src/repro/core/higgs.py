@@ -11,20 +11,18 @@ bottom-up whenever theta nodes of a level complete.
 """
 from __future__ import annotations
 
-import math
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.planner import QueryPlanner
+from repro.api.protocol import LegacyQueryMixin
+from repro.api.queries import QueryBatch, QueryResult
 from repro.core import cmatrix, hashing
 from repro.core.cmatrix import EMPTY, NodeState
+from repro.core.cmatrix import pow2_pad as _pow2_pad
 from repro.core.params import HiggsParams
-
-
-def _pow2_pad(n: int, lo: int = 8) -> int:
-    return max(lo, 1 << max(0, (n - 1).bit_length()))
 
 
 class _LevelPool:
@@ -75,6 +73,37 @@ class _LevelPool:
         return nodes, jnp.asarray(mask)
 
 
+class _LeafIndex:
+    """Leaf [start, end] timestamp keys (the B+-tree key strip) with
+    amortized-doubling storage — ``np.append`` per closed leaf made
+    metadata growth O(n^2) over the stream."""
+
+    def __init__(self):
+        self.n = 0
+        self._starts = np.zeros((16,), np.uint64)
+        self._ends = np.zeros((16,), np.uint64)
+
+    def append(self, ts0: int, ts1: int) -> None:
+        if self.n == len(self._starts):
+            cap = 2 * len(self._starts)
+            starts = np.zeros((cap,), np.uint64)
+            ends = np.zeros((cap,), np.uint64)
+            starts[: self.n] = self._starts
+            ends[: self.n] = self._ends
+            self._starts, self._ends = starts, ends
+        self._starts[self.n] = np.uint64(ts0)
+        self._ends[self.n] = np.uint64(ts1)
+        self.n += 1
+
+    @property
+    def starts(self) -> np.ndarray:
+        return self._starts[: self.n]
+
+    @property
+    def ends(self) -> np.ndarray:
+        return self._ends[: self.n]
+
+
 class _OverflowStore:
     """Host-side overflow blocks: canonical entries per (level, node)."""
 
@@ -104,21 +133,63 @@ class _OverflowStore:
         return sum(len(v["w"]) for v in self.data.values())
 
 
-class HiggsSketch:
-    """The full HIGGS structure with TRQ primitives."""
+class HiggsSketch(LegacyQueryMixin):
+    """The full HIGGS structure behind the ``GraphSummary`` protocol.
+
+    The batched surface is :meth:`query` (a typed query batch executed by
+    the :class:`~repro.api.planner.QueryPlanner`); the legacy per-method
+    API (``edge_query``/``vertex_query``/``path_query``/``subgraph_query``)
+    comes from :class:`LegacyQueryMixin` as thin shims over :meth:`query`.
+    """
+
+    name = "HIGGS"
 
     def __init__(self, params: HiggsParams = HiggsParams()):
         self.params = params
         self.pools: list[_LevelPool] = [
             _LevelPool(params.d1, params.b)]       # level 1 (leaves)
-        self.leaf_starts = np.zeros((0,), np.uint64)
-        self.leaf_ends = np.zeros((0,), np.uint64)
+        self._leaves = _LeafIndex()
         self.ob = _OverflowStore()
         self._buf: list[np.ndarray] = []           # pending raw items
         self._buf_len = 0
         self.n_items = 0
-        self.probe_counter = 0                     # buckets probed (queries)
+        self._version = 0                          # bumped on tree mutation
+        self._probe_base = 0                       # legacy counter offset
+        self.planner = QueryPlanner(self)
         self._chunk_pad = _pow2_pad(params.chunk_size, lo=64)
+
+    @property
+    def leaf_starts(self) -> np.ndarray:
+        return self._leaves.starts
+
+    @property
+    def leaf_ends(self) -> np.ndarray:
+        return self._leaves.ends
+
+    @property
+    def structure_version(self) -> int:
+        """Monotone counter of tree mutations; the planner's memoized
+        boundary-search plans are valid for a single version."""
+        return self._version
+
+    @property
+    def probe_counter(self) -> int:
+        """Legacy view of buckets probed; canonical accounting now lives
+        in per-execution :class:`~repro.api.queries.QueryStats`."""
+        return self._probe_base + self.planner.lifetime.buckets_probed
+
+    @probe_counter.setter
+    def probe_counter(self, value: int) -> None:
+        self._probe_base = value - self.planner.lifetime.buckets_probed
+
+    # ------------------------------------------------------------------
+    # batched queries (GraphSummary surface)
+    # ------------------------------------------------------------------
+
+    def query(self, queries: QueryBatch) -> QueryResult:
+        """Execute a typed query batch: one boundary search per distinct
+        time range, one device probe per (level, range class)."""
+        return self.planner.execute(queries)
 
     # ------------------------------------------------------------------
     # insertion
@@ -192,8 +263,8 @@ class HiggsSketch:
             padded(w, np.float32), padded(t, np.uint32),
             jnp.asarray(valid), p)
         leaf_id = self.pools[0].append(node)
-        self.leaf_starts = np.append(self.leaf_starts, np.uint64(t[0]))
-        self.leaf_ends = np.append(self.leaf_ends, np.uint64(t[-1]))
+        self._leaves.append(int(t[0]), int(t[-1]))
+        self._version += 1
 
         k = int(n_spill)
         if k:
@@ -323,7 +394,7 @@ class HiggsSketch:
         return plan, filtered
 
     # ------------------------------------------------------------------
-    # TRQ primitives
+    # query-coordinate hashing (shared with the planner)
     # ------------------------------------------------------------------
 
     def _query_coords(self, vid: np.ndarray, side: str):
@@ -333,129 +404,6 @@ class HiggsSketch:
         f1 = h & p.fp_mask
         base = (h >> p.F1) % p.d1
         return jnp.asarray(f1), jnp.asarray(base)
-
-    def edge_query(self, src, dst, ts: int, te: int) -> np.ndarray:
-        """Aggregated weight of edges src->dst within [ts, te]; (q,)."""
-        p = self.params
-        src = np.atleast_1d(np.asarray(src, np.uint32))
-        dst = np.atleast_1d(np.asarray(dst, np.uint32))
-        f1s, bs = self._query_coords(src, "s")
-        f1d, bd = self._query_coords(dst, "d")
-        plan, filtered = self.boundary_search(ts, te)
-        out = np.zeros((len(src),), np.float64)
-        for level, ids in sorted(plan.items()):
-            out += self._probe_level_edge(level, np.asarray(ids), f1s, bs,
-                                          f1d, bd, ts, te, filter_time=False)
-            out += self._ob_edge(level, ids, f1s, bs, f1d, bd, ts, te,
-                                 filter_time=False)
-        if filtered:
-            out += self._probe_level_edge(1, np.asarray(filtered), f1s, bs,
-                                          f1d, bd, ts, te, filter_time=True)
-            out += self._ob_edge(1, filtered, f1s, bs, f1d, bd, ts, te,
-                                 filter_time=True)
-        return out
-
-    def vertex_query(self, v, ts: int, te: int,
-                     direction: str = "out") -> np.ndarray:
-        """Aggregated weight of v's outgoing/incoming edges in [ts, te]."""
-        p = self.params
-        v = np.atleast_1d(np.asarray(v, np.uint32))
-        side = "s" if direction == "out" else "d"
-        f1, base = self._query_coords(v, side)
-        plan, filtered = self.boundary_search(ts, te)
-        out = np.zeros((len(v),), np.float64)
-        for level, ids in sorted(plan.items()):
-            out += self._probe_level_vertex(level, np.asarray(ids), f1, base,
-                                            ts, te, direction, False)
-            out += self._ob_vertex(level, ids, f1, base, ts, te, direction,
-                                   False)
-        if filtered:
-            out += self._probe_level_vertex(1, np.asarray(filtered), f1,
-                                            base, ts, te, direction, True)
-            out += self._ob_vertex(1, filtered, f1, base, ts, te, direction,
-                                   True)
-        return out
-
-    def path_query(self, path_vertices, ts: int, te: int) -> float:
-        """Sum of edge-query results along a path (paper Sec. III)."""
-        srcs = np.asarray(path_vertices[:-1], np.uint32)
-        dsts = np.asarray(path_vertices[1:], np.uint32)
-        return float(np.sum(self.edge_query(srcs, dsts, ts, te)))
-
-    def subgraph_query(self, edges, ts: int, te: int) -> float:
-        """Sum of edge-query results over a set of (src, dst) pairs."""
-        srcs = np.asarray([e[0] for e in edges], np.uint32)
-        dsts = np.asarray([e[1] for e in edges], np.uint32)
-        return float(np.sum(self.edge_query(srcs, dsts, ts, te)))
-
-    # -- device probes ---------------------------------------------------
-
-    def _probe_level_edge(self, level, ids, f1s, bs, f1d, bd, ts, te,
-                          filter_time):
-        if len(ids) == 0 or level > len(self.pools) or \
-                self.pools[level - 1].n == 0:
-            return 0.0
-        p = self.params
-        r = p.r if p.use_mmb else 1
-        self.probe_counter += len(ids) * r * r * len(np.asarray(f1s))
-        nodes, mask = self.pools[level - 1].gather(ids, _pow2_pad(len(ids)))
-        fs_l, rows = cmatrix.coords_at_level(f1s, bs, level, p)
-        fd_l, cols = cmatrix.coords_at_level(f1d, bd, level, p)
-        res = cmatrix.probe_edge(nodes, mask, fs_l, fd_l, rows, cols,
-                                 np.uint32(ts), np.uint32(te),
-                                 match_time=filter_time)
-        return np.asarray(res, np.float64)
-
-    def _probe_level_vertex(self, level, ids, f1, base, ts, te, direction,
-                            filter_time):
-        if len(ids) == 0 or level > len(self.pools) or \
-                self.pools[level - 1].n == 0:
-            return 0.0
-        p = self.params
-        r = p.r if p.use_mmb else 1
-        self.probe_counter += len(ids) * r * p.d(level) * \
-            len(np.asarray(f1))
-        nodes, mask = self.pools[level - 1].gather(ids, _pow2_pad(len(ids)))
-        f_l, rows = cmatrix.coords_at_level(f1, base, level, p)
-        res = cmatrix.probe_vertex(nodes, mask, f_l, rows, np.uint32(ts),
-                                   np.uint32(te), direction=direction,
-                                   match_time=filter_time)
-        return np.asarray(res, np.float64)
-
-    # -- host-side overflow-block probes ----------------------------------
-
-    def _ob_edge(self, level, ids, f1s, bs, f1d, bd, ts, te, filter_time):
-        f1s, bs = np.asarray(f1s), np.asarray(bs)
-        f1d, bd = np.asarray(f1d), np.asarray(bd)
-        out = np.zeros((len(f1s),), np.float64)
-        for nid in ids:
-            rec = self.ob.get(level, int(nid))
-            if not rec:
-                continue
-            tok = np.ones(len(rec["w"]), bool) if not filter_time else \
-                (rec["t"] >= ts) & (rec["t"] <= te)
-            m = (rec["f1s"][None, :] == f1s[:, None]) & \
-                (rec["f1d"][None, :] == f1d[:, None]) & \
-                (rec["bs"][None, :] == bs[:, None]) & \
-                (rec["bd"][None, :] == bd[:, None]) & tok[None, :]
-            out += (m * rec["w"][None, :]).sum(axis=1)
-        return out
-
-    def _ob_vertex(self, level, ids, f1, base, ts, te, direction,
-                   filter_time):
-        f1, base = np.asarray(f1), np.asarray(base)
-        fk, bk = ("f1s", "bs") if direction == "out" else ("f1d", "bd")
-        out = np.zeros((len(f1),), np.float64)
-        for nid in ids:
-            rec = self.ob.get(level, int(nid))
-            if not rec:
-                continue
-            tok = np.ones(len(rec["w"]), bool) if not filter_time else \
-                (rec["t"] >= ts) & (rec["t"] <= te)
-            m = (rec[fk][None, :] == f1[:, None]) & \
-                (rec[bk][None, :] == base[:, None]) & tok[None, :]
-            out += (m * rec["w"][None, :]).sum(axis=1)
-        return out
 
     # ------------------------------------------------------------------
     # accounting

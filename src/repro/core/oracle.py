@@ -10,9 +10,18 @@ from collections import defaultdict
 
 import numpy as np
 
+from repro.api.protocol import PointwiseQueryMixin
 
-class ExactOracle:
-    """Stores every stream item; answers TRQs exactly."""
+
+class ExactOracle(PointwiseQueryMixin):
+    """Stores every stream item; answers TRQs exactly.
+
+    Implements the full ``GraphSummary`` protocol so harness code can
+    treat ground truth as just another summary.
+    """
+
+    name = "Exact"
+    temporal = True
 
     def __init__(self):
         # edge -> sorted list of (t, w)
@@ -53,14 +62,12 @@ class ExactOracle:
         return np.array([self._range_sum(table.get(int(x), []), ts, te)
                          for x in v], np.float64)
 
-    def path_query(self, path_vertices, ts: int, te: int) -> float:
-        return float(sum(self.edge_query(path_vertices[:-1],
-                                         path_vertices[1:], ts, te)))
+    def flush(self) -> None:
+        pass
 
-    def subgraph_query(self, edges, ts: int, te: int) -> float:
-        srcs = [e[0] for e in edges]
-        dsts = [e[1] for e in edges]
-        return float(sum(self.edge_query(srcs, dsts, ts, te)))
+    def space_bytes(self) -> float:
+        """Raw storage: (t, w) per item in each of the three tables."""
+        return self.n_items * 3 * 16.0
 
     def total_weight(self, ts: int, te: int) -> float:
         return float(sum(self._range_sum(v, ts, te)

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.models.common import ShardCfg
 
 
@@ -140,11 +141,10 @@ def moe_ffn(x, params, cfg, scfg: ShardCfg, mesh):
         return out.reshape(xl.shape), load
 
     pspec = moe_params_spec(cfg, scfg, tp_size)
-    fn = jax.shard_map(inner, mesh=mesh,
-                       in_specs=(P(x_dp, None, None), pspec["router"],
-                                 pspec["w_gate"], pspec["w_up"],
-                                 pspec["w_down"]),
-                       out_specs=(P(x_dp, None, None), P(None)),
-                       check_vma=False)
+    fn = compat.shard_map(inner, mesh=mesh,
+                          in_specs=(P(x_dp, None, None), pspec["router"],
+                                    pspec["w_gate"], pspec["w_up"],
+                                    pspec["w_down"]),
+                          out_specs=(P(x_dp, None, None), P(None)))
     return fn(x, params["router"], params["w_gate"], params["w_up"],
               params["w_down"])

@@ -9,9 +9,12 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Callable, Iterator
+from typing import TYPE_CHECKING, Callable, Iterator
 
 import numpy as np
+
+if TYPE_CHECKING:
+    from repro.api import GraphSummary
 
 
 class StreamPipeline:
@@ -33,14 +36,26 @@ class StreamPipeline:
             self.cursor = sl.stop
             yield tuple(a[sl] for a in self.arrays)
 
-    def feed(self, sketch, progress: Callable[[int], None] | None = None,
+    def feed(self, sketch: "GraphSummary",
+             progress: Callable[[int], None] | None = None,
              flush: bool = True) -> None:
+        """Feed every remaining batch into any ``GraphSummary``."""
         for batch in self:
             sketch.insert(*batch)
             if progress:
                 progress(self.cursor)
         if flush:
             sketch.flush()
+
+    def feed_summary(self, name: str,
+                     progress: Callable[[int], None] | None = None,
+                     flush: bool = True, **kw) -> "GraphSummary":
+        """Build a summary from the registry and feed the stream into it:
+        ``pipeline.feed_summary("higgs", d1=16, F1=19)``."""
+        from repro.api import make_summary
+        sketch = make_summary(name, **kw)
+        self.feed(sketch, progress=progress, flush=flush)
+        return sketch
 
     # -- fault tolerance ------------------------------------------------
     def save_cursor(self, path: str) -> None:

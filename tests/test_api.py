@@ -1,0 +1,286 @@
+"""Unified GraphSummary API: boundary-search edge cases, batched-planner
+vs legacy equivalence, the <= 1-dispatch-per-(level, range-class)
+contract, and the summary registry."""
+import numpy as np
+import pytest
+
+from repro.api import (EdgeQuery, GraphSummary, PathQuery, SubgraphQuery,
+                       VertexQuery, available_summaries, make_summary)
+from repro.core.higgs import HiggsSketch
+from repro.core.oracle import ExactOracle
+from repro.core.params import HiggsParams
+
+PARAMS = HiggsParams(d1=8, F1=22, b=3, r=4)
+
+
+def make_stream(n, n_vertices, t_max, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_vertices, n).astype(np.uint32)
+    dst = rng.integers(0, n_vertices, n).astype(np.uint32)
+    w = rng.integers(1, 10, n).astype(np.float32)
+    t = np.sort(rng.integers(0, t_max, n).astype(np.uint32))
+    return src, dst, w, t
+
+
+def build(params, stream):
+    sk = HiggsSketch(params)
+    sk.insert(*stream)
+    sk.flush()
+    return sk
+
+
+def two_leaf_sketch():
+    """Two leaves with known key ranges: [0, 26] and [1000, 1026]."""
+    params = HiggsParams(d1=4, b=2, r=2, F1=14)
+    cs = params.chunk_size
+    rng = np.random.default_rng(0)
+    t = np.concatenate([np.arange(cs, dtype=np.uint32),
+                        1000 + np.arange(cs, dtype=np.uint32)])
+    src = rng.integers(0, 30, 2 * cs).astype(np.uint32)
+    dst = rng.integers(0, 30, 2 * cs).astype(np.uint32)
+    w = np.ones(2 * cs, np.float32)
+    sk = build(params, (src, dst, w, t))
+    assert len(sk.leaf_starts) == 2
+    return sk
+
+
+class TestBoundarySearchEdgeCases:
+    def test_empty_sketch(self):
+        sk = HiggsSketch(PARAMS)
+        assert sk.boundary_search(0, 100) == ({}, [])
+        res = sk.query([EdgeQuery([1], [2], 0, 100),
+                        VertexQuery([1], 0, 100)])
+        np.testing.assert_array_equal(res.values[0], [0.0])
+        np.testing.assert_array_equal(res.values[1], [0.0])
+        assert res.stats.device_dispatches == 0
+
+    def test_range_entirely_between_two_leaves(self):
+        sk = two_leaf_sketch()
+        plan, filtered = sk.boundary_search(100, 900)
+        assert plan == {} and filtered == []
+        est = sk.edge_query(np.arange(30, dtype=np.uint32),
+                            np.arange(30, dtype=np.uint32), 100, 900)
+        np.testing.assert_array_equal(est, 0.0)
+
+    def test_single_partially_covered_leaf(self):
+        sk = two_leaf_sketch()
+        plan, filtered = sk.boundary_search(5, 10)
+        assert plan == {}
+        assert filtered == [0]
+
+    def test_exactly_one_full_leaf(self):
+        sk = two_leaf_sketch()
+        plan, filtered = sk.boundary_search(0, 26)
+        assert filtered == []
+        assert plan == {1: [0]}
+
+    def test_range_covering_everything(self):
+        sk = two_leaf_sketch()
+        plan, filtered = sk.boundary_search(0, 5000)
+        assert filtered == []
+        theta = sk.params.theta
+        leaves = sorted(
+            leaf for level, ids in plan.items() for u in ids
+            for leaf in range(u * theta ** (level - 1),
+                              (u + 1) * theta ** (level - 1)))
+        assert leaves == [0, 1]
+
+    def test_inverted_range(self):
+        sk = two_leaf_sketch()
+        assert sk.boundary_search(50, 10) == ({}, [])
+
+
+class TestPlannerEquivalence:
+    """Batched execution is numerically identical to the legacy shims
+    (which are themselves single-element batches) on randomized streams
+    and randomized mixed batches."""
+
+    @pytest.mark.parametrize("params,seed", [
+        (PARAMS, 0),
+        (HiggsParams(d1=4, F1=6, b=2, r=2), 1),     # collision-heavy
+        (HiggsParams(d1=8, F1=22, b=3, r=4, theta=4), 2),
+    ])
+    def test_randomized_batches(self, params, seed):
+        stream = make_stream(8000, 150, 20000, seed)
+        sk = build(params, stream)
+        rng = np.random.default_rng(seed + 100)
+        ranges = [tuple(sorted(rng.integers(0, 20000, 2).tolist()))
+                  for _ in range(3)]
+
+        batch = []
+        for ts, te in ranges:
+            qs = rng.integers(0, 150, 16).astype(np.uint32)
+            qd = rng.integers(0, 150, 16).astype(np.uint32)
+            batch.append(EdgeQuery(qs, qd, ts, te))
+            batch.append(VertexQuery(qs[:8], ts, te, "out"))
+            batch.append(VertexQuery(qd[:8], ts, te, "in"))
+            batch.append(PathQuery(rng.integers(0, 150, 5), ts, te))
+            batch.append(SubgraphQuery(
+                rng.integers(0, 150, (6, 2)), ts, te))
+        order = rng.permutation(len(batch))
+        batch = [batch[i] for i in order]
+
+        res = sk.query(batch)
+        for q, got in zip(batch, res.values):
+            if isinstance(q, EdgeQuery):
+                want = sk.edge_query(q.src, q.dst, q.ts, q.te)
+            elif isinstance(q, VertexQuery):
+                want = sk.vertex_query(q.v, q.ts, q.te, q.direction)
+            elif isinstance(q, PathQuery):
+                want = sk.path_query(q.vertices, q.ts, q.te)
+            else:
+                want = sk.subgraph_query(q.edges, q.ts, q.te)
+            np.testing.assert_allclose(got, want, rtol=1e-12)
+
+    def test_matches_oracle_when_collision_free(self):
+        stream = make_stream(4000, 150, 5000, seed=3)
+        sk = build(PARAMS, stream)
+        ora = ExactOracle()
+        ora.insert(*stream)
+        batch = [EdgeQuery(stream[0][:64], stream[1][:64], 100, 4000),
+                 VertexQuery(stream[0][:32], 0, 5000, "out"),
+                 PathQuery([1, 2, 3, 4], 0, 5000),
+                 SubgraphQuery([(1, 2), (3, 4), (5, 6)], 100, 4000)]
+        est = sk.query(batch)
+        true = ora.query(batch)
+        for got, want in zip(est.values, true.values):
+            np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+class TestPlannerDispatch:
+    """Acceptance: a compound-query batch costs at most one device probe
+    per (level, time-range class) and one boundary search per class."""
+
+    def setup_method(self):
+        params = HiggsParams(d1=4, F1=12, b=2, r=2, theta=4)
+        self.sk = build(params, make_stream(20000, 100, 50000, seed=4))
+        assert self.sk.n_levels >= 3          # exercises upper levels
+
+    @staticmethod
+    def plan_cost(sk, ranges):
+        """Upper bound: levels in plan + filtered pseudo-level, per class."""
+        total = 0
+        for ts, te in ranges:
+            plan, filtered = sk.boundary_search(ts, te)
+            total += len(plan) + (1 if filtered else 0)
+        return total
+
+    def test_compound_batch_dispatch_bound(self):
+        sk = self.sk
+        ranges = [(1000, 42000), (5000, 9000)]
+        rng = np.random.default_rng(5)
+        batch = []
+        for ts, te in ranges:
+            for _ in range(10):
+                batch.append(PathQuery(rng.integers(0, 100, 6), ts, te))
+                batch.append(SubgraphQuery(
+                    rng.integers(0, 100, (8, 2)), ts, te))
+        res = sk.query(batch)
+        assert res.stats.device_dispatches <= self.plan_cost(sk, ranges)
+        assert res.stats.boundary_searches + res.stats.plan_cache_hits \
+            == len(ranges)
+
+    def test_plan_cache_across_calls_and_invalidation(self):
+        sk = self.sk
+        batch = [PathQuery([1, 2, 3], 1000, 42000)]
+        first = sk.query(batch).stats
+        assert first.boundary_searches == 1
+        again = sk.query(batch).stats
+        assert again.boundary_searches == 0
+        assert again.plan_cache_hits == 1
+        # a mutation invalidates memoized plans
+        s, d, w, t = make_stream(2000, 100, 50000, seed=6)
+        sk.insert(s, d, w, t)
+        sk.flush()
+        after = sk.query(batch).stats
+        assert after.boundary_searches == 1
+
+    def test_mixed_kinds_one_dispatch_per_kind_level(self):
+        sk = self.sk
+        ranges = [(1000, 42000)]
+        batch = [EdgeQuery([1, 2], [3, 4], 1000, 42000),
+                 SubgraphQuery([(5, 6)], 1000, 42000),
+                 VertexQuery([7, 8], 1000, 42000, "out")]
+        res = sk.query(batch)
+        # edge-lowered queries share probes; vertex adds its own kind
+        assert res.stats.device_dispatches <= 2 * self.plan_cost(sk, ranges)
+
+
+class TestProtocolAndRegistry:
+    NAMES = ("higgs", "tcm", "horae", "horae-cpt", "pgss", "auxotime",
+             "auxotime-cpt", "oracle")
+
+    def kwargs(self, name):
+        if name == "higgs":
+            return dict(d1=8, F1=18, b=2, r=2)
+        if name in ("horae", "horae-cpt"):
+            return dict(l_bits=12, d=32, b=2)
+        if name == "pgss":
+            return dict(l_bits=12, m=1 << 12)
+        if name in ("auxotime", "auxotime-cpt"):
+            return dict(l_bits=12, d=16, b=2)
+        return {}
+
+    @pytest.mark.parametrize("name", NAMES)
+    def test_registry_builds_protocol_instances(self, name):
+        sk = make_summary(name, **self.kwargs(name))
+        assert isinstance(sk, GraphSummary)
+
+    @pytest.mark.parametrize("name", NAMES)
+    def test_query_matches_legacy_methods(self, name):
+        stream = make_stream(2000, 60, 4000, seed=7)
+        sk = make_summary(name, **self.kwargs(name))
+        sk.insert(*stream)
+        sk.flush()
+        qs = stream[0][:12]
+        qd = stream[1][:12]
+        batch = [EdgeQuery(qs, qd, 0, 4000),
+                 VertexQuery(qs[:6], 0, 4000, "out"),
+                 PathQuery([1, 2, 3], 0, 4000),
+                 SubgraphQuery([(1, 2), (2, 3)], 0, 4000)]
+        res = sk.query(batch)
+        assert res.stats.n_queries == 4
+        np.testing.assert_allclose(
+            res.values[0], sk.edge_query(qs, qd, 0, 4000), rtol=1e-12)
+        np.testing.assert_allclose(
+            res.values[1], sk.vertex_query(qs[:6], 0, 4000, "out"),
+            rtol=1e-12)
+        assert res.values[2] == pytest.approx(
+            sk.path_query([1, 2, 3], 0, 4000), rel=1e-12)
+        assert res.values[3] == pytest.approx(
+            sk.subgraph_query([(1, 2), (2, 3)], 0, 4000), rel=1e-12)
+
+    def test_unknown_name_raises(self):
+        with pytest.raises(KeyError, match="unknown summary"):
+            make_summary("nope")
+
+    def test_available_summaries_listed(self):
+        names = available_summaries()
+        assert "higgs" in names and "horae-cpt" in names
+
+    def test_probe_counter_compat(self):
+        """The legacy counter survives as a derived, settable property."""
+        sk = make_summary("higgs", d1=8, F1=18, b=2, r=2)
+        sk.insert(*make_stream(2000, 60, 4000, seed=8))
+        sk.flush()
+        sk.probe_counter = 0
+        sk.edge_query([1], [2], 0, 4000)
+        assert sk.probe_counter > 0
+
+
+class TestLeafMetadataGrowth:
+    def test_many_leaves_consistent(self):
+        """Amortized-doubling leaf index stays sorted and aligned after
+        hundreds of appends (the old np.append path was O(n^2))."""
+        params = HiggsParams(d1=4, b=2, r=2, F1=14)
+        cs = params.chunk_size
+        n = 300 * cs
+        rng = np.random.default_rng(9)
+        t = np.arange(n, dtype=np.uint32)
+        stream = (rng.integers(0, 50, n).astype(np.uint32),
+                  rng.integers(0, 50, n).astype(np.uint32),
+                  np.ones(n, np.float32), t)
+        sk = build(params, stream)
+        assert len(sk.leaf_starts) == len(sk.leaf_ends) == 300
+        assert (sk.leaf_starts <= sk.leaf_ends).all()
+        assert (sk.leaf_ends[:-1] <= sk.leaf_starts[1:]).all()

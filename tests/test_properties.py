@@ -1,6 +1,11 @@
 """Property-based tests (hypothesis) for the system's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dependency; install with `pip install .[test]`")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import cmatrix, hashing
 from repro.core.higgs import HiggsSketch

@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro import checkpoint as ckpt
+from repro import compat
 from repro.optim import AdamW, cosine_schedule
 from repro.runtime import PreemptionGuard, StragglerMonitor
 from repro.runtime.compression import compressed_psum
@@ -45,8 +46,7 @@ class TestCheckpoint:
         d = str(tmp_path)
         tree = {"w": jnp.arange(16.0).reshape(4, 4)}
         ckpt.save_checkpoint(d, 3, tree)
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((1, 1), ("data", "model"))
         sh = {"w": NamedSharding(mesh, P("data", "model"))}
         got, _ = ckpt.restore_checkpoint(d, 3, tree, shardings=sh)
         assert got["w"].sharding == sh["w"]
@@ -134,15 +134,14 @@ class TestPipeline:
 
 class TestCompression:
     def test_compressed_psum_single_rank_identity(self):
-        mesh = jax.make_mesh((1,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((1,), ("pod",))
         x = jnp.asarray(np.random.default_rng(0).normal(
             0, 2.0, (32, 17)).astype(np.float32))
 
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             lambda v: compressed_psum(v, "pod"), mesh=mesh,
             in_specs=jax.sharding.PartitionSpec(),
-            out_specs=jax.sharding.PartitionSpec(), check_vma=False)
+            out_specs=jax.sharding.PartitionSpec())
         out = np.asarray(jax.jit(fn)(x))
         err = np.abs(out - np.asarray(x))
         assert err.max() <= np.abs(np.asarray(x)).max() / 127 + 1e-6
