@@ -28,16 +28,25 @@ def run(n_edges: int = 40_000, seed: int = 0):
     src2, dst2, t2 = src[idx], dst[idx], t[idx]
     w2 = np.ones(len(idx), np.float32)
     import repro.core.cmatrix as cm
-    orig = cm._premerge
+    orig = (cm._premerge, cm._premerge_pre, cm._premerge_host)
     # warm the FULL pipeline once (all aggregation levels compile here);
-    # per-variant we only clear insert_chunk's cache
+    # per-variant we only clear the chunk-insert caches
     warm = HiggsSketch(HiggsParams(d1=16, F1=19))
     warm.insert(src2, dst2, w2, t2)
     warm.flush()
-    for tag, enabled in (("premerge_on", True), ("premerge_off", False)):
-        cm._premerge = orig if enabled else (
-            lambda hs, hd, tt, ww, vv: (ww, vv))
+
+    def _clear():
         cm.insert_chunk._clear_cache()
+        cm.insert_chunks_pre._clear_cache()
+
+    for tag, enabled in (("premerge_on", True), ("premerge_off", False)):
+        if enabled:
+            cm._premerge, cm._premerge_pre, cm._premerge_host = orig
+        else:
+            cm._premerge = lambda hs, hd, tt, ww, vv: (ww, vv)
+            cm._premerge_pre = lambda ww, vv, o, s: (ww, vv)
+            cm._premerge_host = lambda ww, vv, o, s: (ww, vv)
+        _clear()
         warm2 = HiggsSketch(HiggsParams(d1=16, F1=19))
         warm2.insert(src2[:8192], dst2[:8192], w2[:8192], t2[:8192])
         sk = HiggsSketch(HiggsParams(d1=16, F1=19))
@@ -49,8 +58,8 @@ def run(n_edges: int = 40_000, seed: int = 0):
                     f"utilization={sk.utilization():.3f};"
                     f"ob_entries={sk.ob.total_entries()};"
                     f"leaves={len(sk.leaf_starts)}")
-    cm._premerge = orig
-    cm.insert_chunk._clear_cache()
+    cm._premerge, cm._premerge_pre, cm._premerge_host = orig
+    _clear()
 
     # --- H-B: query batching
     sk = HiggsSketch(HiggsParams(d1=16, F1=19))

@@ -1,7 +1,19 @@
 """Paper Fig. 16-18: insertion throughput, insertion latency, and
-deletion throughput (deletion = negative-weight insertion)."""
+deletion throughput (deletion = negative-weight insertion).
+
+Also reports the HIGGS serial-vs-batched ingestion comparison (PR 2):
+the legacy one-launch-per-leaf reference path against the batched
+multi-leaf engine, fed in leaf-aligned batches.  Both variants are
+warmed with one full pass first so the numbers are steady-state
+ingestion, not XLA compile time.
+
+``--smoke`` runs a scaled-down version of only that comparison and
+fails loudly if the batched engine loses its edge or diverges from the
+reference — the CI regression gate for the ingestion path.
+"""
 from __future__ import annotations
 
+import argparse
 import time
 
 import numpy as np
@@ -10,11 +22,54 @@ from benchmarks import common
 from repro.stream.generator import lkml_like_stream
 
 
+def _feed(sk, stream, batch: int) -> float:
+    src, dst, w, t = stream
+    n = len(src)
+    t0 = time.perf_counter()
+    for s in range(0, n, batch):
+        sk.insert(src[s:s + batch], dst[s:s + batch], w[s:s + batch],
+                  t[s:s + batch])
+    sk.flush()
+    return time.perf_counter() - t0
+
+
+def serial_vs_batched(stream, repeat: int = 1):
+    """Steady-state ingestion seconds for the serial reference path and
+    the batched engine; returns (serial_s, batched_s, sketches)."""
+    from repro.core.higgs import HiggsSketch
+    from repro.core.params import HiggsParams
+
+    n = len(stream[0])
+    params = {
+        "serial": HiggsParams(d1=16, F1=19, batched_ingest=False),
+        "batched": HiggsParams(d1=16, F1=19),
+    }
+    secs, sketches = {}, {}
+    for tag, p in params.items():
+        batch = max(p.chunk_size, 8192 // p.chunk_size * p.chunk_size)
+        _feed(HiggsSketch(p), stream, batch)        # warm all shapes
+        best = float("inf")
+        for _ in range(repeat):
+            sk = HiggsSketch(p)
+            best = min(best, _feed(sk, stream, batch))
+        secs[tag] = best
+        sketches[tag] = sk
+        common.emit(f"throughput/ingest/higgs_{tag}", best / n * 1e6,
+                    f"edges_per_s={n / best:.0f}")
+    common.emit("throughput/ingest/batched_speedup",
+                secs["serial"] / secs["batched"],
+                f"serial_s={secs['serial']:.2f};"
+                f"batched_s={secs['batched']:.2f}")
+    return secs["serial"], secs["batched"], sketches
+
+
 def run(n_edges: int = 100_000, seed: int = 0):
     stream = lkml_like_stream(n_edges=n_edges, seed=seed)
     src, dst, w, t = stream
     t_max = int(t[-1])
     l_bits = max(int(np.ceil(np.log2(t_max + 1))), 1)
+
+    serial_vs_batched(stream)
 
     sketches = common.build_all(stream, l_bits)
     for name, (sk, ins_s) in sketches.items():
@@ -33,5 +88,44 @@ def run(n_edges: int = 100_000, seed: int = 0):
                     f"edges_per_s={half / dt:.0f}")
 
 
+def smoke(n_edges: int = 30_000, seed: int = 0, min_speedup: float = 1.5):
+    """CI gate: batched must stay >= min_speedup x serial AND produce the
+    bit-identical sketch."""
+    from repro.core.cmatrix import NodeState
+
+    stream = lkml_like_stream(n_edges=n_edges, seed=seed)
+    serial_s, batched_s, sk = serial_vs_batched(stream)
+    speedup = serial_s / batched_s
+    a, b = sk["serial"], sk["batched"]
+    assert np.array_equal(a.leaf_starts, b.leaf_starts), \
+        "smoke: leaf start keys diverged"
+    assert np.array_equal(a.leaf_ends, b.leaf_ends), \
+        "smoke: leaf end keys diverged"
+    for lvl, (pa, pb) in enumerate(zip(a.pools, b.pools)):
+        assert pa.n == pb.n, f"smoke: level {lvl + 1} node count diverged"
+        for name in NodeState._fields:
+            assert np.array_equal(pa.arrs[name][:pa.n],
+                                  pb.arrs[name][:pb.n]), \
+                f"smoke: level {lvl + 1} {name} diverged"
+    da, db = a.ob.data, b.ob.data
+    assert set(da) == set(db), "smoke: overflow keys diverged"
+    for key in da:
+        for f in da[key]:
+            assert np.array_equal(da[key][f], db[key][f]), \
+                f"smoke: overflow {key}/{f} diverged"
+    assert speedup >= min_speedup, (
+        f"smoke: batched ingestion regressed to {speedup:.2f}x serial "
+        f"(floor {min_speedup}x)")
+    print(f"smoke OK: batched={speedup:.2f}x serial, sketches identical")
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny ingestion regression gate (CI)")
+    ap.add_argument("--n-edges", type=int, default=0)
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(n_edges=args.n_edges or 30_000)
+    else:
+        run(n_edges=args.n_edges or 100_000)

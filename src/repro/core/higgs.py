@@ -61,6 +61,21 @@ class _LevelPool:
         self.n += 1
         return idx
 
+    def append_batch(self, arrs: dict, count: int) -> int:
+        """Append ``count`` nodes from host-stacked field arrays in one
+        block copy; returns the base node id."""
+        need = self.n + count
+        if need > self.cap:
+            cap = max(4, self.cap)
+            while cap < need:
+                cap *= 2
+            self._grow(cap)
+        for name in NodeState._fields:
+            self.arrs[name][self.n:need] = arrs[name][:count]
+        base = self.n
+        self.n = need
+        return base
+
     def gather(self, ids: np.ndarray, pad_to: int):
         """(NodeState stacked to pad_to, mask) for a list of node ids."""
         m = len(ids)
@@ -83,17 +98,30 @@ class _LeafIndex:
         self._starts = np.zeros((16,), np.uint64)
         self._ends = np.zeros((16,), np.uint64)
 
+    def _reserve(self, need: int) -> None:
+        if need <= len(self._starts):
+            return
+        cap = len(self._starts)
+        while cap < need:
+            cap *= 2
+        starts = np.zeros((cap,), np.uint64)
+        ends = np.zeros((cap,), np.uint64)
+        starts[: self.n] = self._starts[: self.n]
+        ends[: self.n] = self._ends[: self.n]
+        self._starts, self._ends = starts, ends
+
     def append(self, ts0: int, ts1: int) -> None:
-        if self.n == len(self._starts):
-            cap = 2 * len(self._starts)
-            starts = np.zeros((cap,), np.uint64)
-            ends = np.zeros((cap,), np.uint64)
-            starts[: self.n] = self._starts
-            ends[: self.n] = self._ends
-            self._starts, self._ends = starts, ends
+        self._reserve(self.n + 1)
         self._starts[self.n] = np.uint64(ts0)
         self._ends[self.n] = np.uint64(ts1)
         self.n += 1
+
+    def extend(self, ts0s: np.ndarray, ts1s: np.ndarray) -> None:
+        m = len(ts0s)
+        self._reserve(self.n + m)
+        self._starts[self.n:self.n + m] = ts0s
+        self._ends[self.n:self.n + m] = ts1s
+        self.n += m
 
     @property
     def starts(self) -> np.ndarray:
@@ -105,32 +133,60 @@ class _LeafIndex:
 
 
 class _OverflowStore:
-    """Host-side overflow blocks: canonical entries per (level, node)."""
+    """Host-side overflow blocks: canonical entries per (level, node).
+
+    Columns grow by amortized doubling (like :class:`_LeafIndex`) — the
+    previous ``np.concatenate`` per add made a hot key's growth O(n^2)
+    over the stream."""
 
     FIELDS = ("f1s", "f1d", "bs", "bd", "w", "t")
 
     def __init__(self):
-        self.data: dict[tuple[int, int], dict[str, np.ndarray]] = {}
+        self._cols: dict[tuple[int, int], dict[str, np.ndarray]] = {}
+        self._len: dict[tuple[int, int], int] = {}
+
+    @staticmethod
+    def _dtype(field: str):
+        return np.float64 if field == "w" else np.uint32
 
     def add(self, level: int, node: int, **cols) -> None:
         n = len(cols["w"])
         if n == 0:
             return
-        rec = {k: np.asarray(cols.get(k, np.zeros(n)),
-                             np.float64 if k == "w" else np.uint32)
-               for k in self.FIELDS}
         key = (level, node)
-        if key in self.data:
-            self.data[key] = {k: np.concatenate([self.data[key][k], rec[k]])
-                              for k in self.FIELDS}
-        else:
-            self.data[key] = rec
+        store = self._cols.get(key)
+        if store is None:
+            store = {k: np.zeros((max(16, n),), self._dtype(k))
+                     for k in self.FIELDS}
+            self._cols[key] = store
+            self._len[key] = 0
+        m = self._len[key]
+        cap = len(store["w"])
+        if m + n > cap:
+            new_cap = max(2 * cap, m + n)
+            for k in self.FIELDS:
+                buf = np.zeros((new_cap,), self._dtype(k))
+                buf[:m] = store[k][:m]
+                store[k] = buf
+        for k in self.FIELDS:
+            store[k][m:m + n] = np.asarray(cols.get(k, np.zeros(n)),
+                                           self._dtype(k))
+        self._len[key] = m + n
 
     def get(self, level: int, node: int):
-        return self.data.get((level, node))
+        key = (level, node)
+        if key not in self._cols:
+            return None
+        m = self._len[key]
+        return {k: v[:m] for k, v in self._cols[key].items()}
+
+    @property
+    def data(self) -> dict:
+        """Trimmed {(level, node): columns} view (accounting/tests)."""
+        return {key: self.get(*key) for key in self._cols}
 
     def total_entries(self) -> int:
-        return sum(len(v["w"]) for v in self.data.values())
+        return sum(self._len.values())
 
 
 class HiggsSketch(LegacyQueryMixin):
@@ -157,6 +213,14 @@ class HiggsSketch(LegacyQueryMixin):
         self._probe_base = 0                       # legacy counter offset
         self.planner = QueryPlanner(self)
         self._chunk_pad = _pow2_pad(params.chunk_size, lo=64)
+        self._backend = self._resolve_backend(params.insert_backend)
+
+    @staticmethod
+    def _resolve_backend(backend: str) -> str:
+        if backend != "auto":
+            return backend
+        import jax
+        return "vector" if jax.default_backend() == "tpu" else "host"
 
     @property
     def leaf_starts(self) -> np.ndarray:
@@ -215,28 +279,55 @@ class HiggsSketch(LegacyQueryMixin):
         self._drain(final=True)
 
     def _drain(self, final: bool) -> None:
+        """Split the pending buffer into every complete leaf at once.
+
+        Chunk boundaries are a deterministic function of the buffered item
+        sequence alone (never of how ``insert`` batched it), so the span
+        scan below is equivalent to the legacy one-leaf-per-iteration loop;
+        closing then happens for all spans in one batched launch (or
+        serially per span on the reference path).
+        """
         cs = self.params.chunk_size
-        while self._buf_len >= cs or (final and self._buf_len > 0):
-            buf = np.concatenate(self._buf, axis=1) if len(self._buf) > 1 \
-                else self._buf[0]
-            self._buf = [buf]
-            take = min(cs, buf.shape[1])
-            ts_col = buf[3]
-            if take < buf.shape[1] and ts_col[take] == ts_col[take - 1]:
+        if self._buf_len < cs and not (final and self._buf_len > 0):
+            return
+        buf = np.concatenate(self._buf, axis=1) if len(self._buf) > 1 \
+            else self._buf[0]
+        ts_col = buf[3]
+        n = buf.shape[1]
+        spans: list[tuple[int, int]] = []
+        pos = 0
+        while n - pos >= cs or (final and n - pos > 0):
+            rem = n - pos
+            take = min(cs, rem)
+            if take < rem and ts_col[pos + take] == ts_col[pos + take - 1]:
                 # never split a run of equal timestamps across leaves
-                boundary_t = ts_col[take - 1]
-                run_end = int(np.searchsorted(ts_col, boundary_t, "right"))
-                run_start = int(np.searchsorted(ts_col, boundary_t, "left"))
+                boundary_t = ts_col[pos + take - 1]
+                tail = ts_col[pos:]
+                run_end = int(np.searchsorted(tail, boundary_t, "right"))
+                run_start = int(np.searchsorted(tail, boundary_t, "left"))
                 # a run longer than a chunk becomes an oversize leaf whose
                 # excess lands in the overflow block (the paper's OB case)
                 take = run_end if run_start == 0 else run_start
-            if not final and take == buf.shape[1]:
+            if not final and take == rem:
                 # cannot prove the trailing timestamp run has ended — wait
-                return
-            chunk, rest = buf[:, :take], buf[:, take:]
+                break
+            spans.append((pos, pos + take))
+            pos += take
+        if pos:
+            rest = buf[:, pos:]
             self._buf = [rest] if rest.shape[1] else []
-            self._buf_len = rest.shape[1]
-            self._close_leaf(chunk)
+            self._buf_len = int(rest.shape[1])
+        else:
+            self._buf = [buf]          # keep concatenated for the next call
+        if not spans:
+            return
+        # the OB ablation re-opens spill leaves recursively, which must
+        # interleave with leaf order — only the serial path can do that
+        if self.params.batched_ingest and self.params.use_ob:
+            self._close_leaves_batched(buf, spans)
+        else:
+            for s, e in spans:
+                self._close_leaf(buf[:, s:e])
 
     def _close_leaf(self, chunk: np.ndarray) -> None:
         p = self.params
@@ -288,6 +379,116 @@ class HiggsSketch(LegacyQueryMixin):
         self._maybe_aggregate()
 
     # ------------------------------------------------------------------
+    # batched multi-leaf closing
+    # ------------------------------------------------------------------
+
+    def _close_leaves_batched(self, buf: np.ndarray,
+                              spans: list[tuple[int, int]]) -> None:
+        """Close every drained span at once: one vectorized hash pass over
+        the drained region, one batched placement pass (numpy phases,
+        vmapped ``insert_chunks_pre``, or the grid-over-leaves Pallas
+        kernel, per the resolved backend), one spill scatter into the
+        overflow store, then the cascade."""
+        p = self.params
+        nl = len(spans)
+        s0, s_end = spans[0][0], spans[-1][1]
+        hs_full = hashing.np_mix32(buf[0, s0:s_end], p.seed)
+        hd_full = hashing.np_mix32(buf[1, s0:s_end], p.seed ^ 0x5BD1E995)
+        w_full = np.ascontiguousarray(buf[2, s0:s_end]).view(np.float32)
+        t_full = buf[3, s0:s_end]
+
+        max_len = max(e - s for s, e in spans)
+        pad = max(self._chunk_pad, _pow2_pad(max_len, lo=64))
+        # the jitted backends pow2-pad the leaf axis too (all-invalid
+        # rows, discarded below) so varying drain sizes don't trigger a
+        # recompile per distinct leaf count; the host engine has no
+        # compile cache and takes the exact count
+        lead = nl if self._backend == "host" else _pow2_pad(nl, lo=1)
+        hs = np.zeros((lead, pad), np.uint32)
+        hd = np.zeros((lead, pad), np.uint32)
+        w = np.zeros((lead, pad), np.float32)
+        t = np.zeros((lead, pad), np.uint32)
+        valid = np.zeros((lead, pad), bool)
+        for i, (s, e) in enumerate(spans):
+            m = e - s
+            hs[i, :m] = hs_full[s - s0:e - s0]
+            hd[i, :m] = hd_full[s - s0:e - s0]
+            w[i, :m] = w_full[s - s0:e - s0]
+            t[i, :m] = t_full[s - s0:e - s0]
+            valid[i, :m] = True
+
+        if self._backend == "pallas":
+            host, spill_mask, w_sp = self._insert_leaves_pallas(
+                hs, hd, w, t, valid)
+        else:
+            fs, fd, rows, cols = cmatrix.host_leaf_coords(hs, hd, p)
+            pm_order, pm_same = cmatrix.host_premerge_meta(hs, hd, t, valid)
+            r = p.r if p.use_mmb else 1
+            orders = cmatrix.host_round_orders(rows, cols, p.d1, r)
+            if self._backend == "host":
+                state4, wmat, spill, w_merged = cmatrix.insert_chunks_host(
+                    fs, fd, rows, cols, w, t, valid, pm_order, pm_same,
+                    orders, p)
+            else:
+                state4, wmat, spill, w_merged = cmatrix.insert_chunks_pre(
+                    jnp.asarray(fs), jnp.asarray(fd), jnp.asarray(rows),
+                    jnp.asarray(cols), jnp.asarray(w), jnp.asarray(t),
+                    jnp.asarray(valid), jnp.asarray(pm_order),
+                    jnp.asarray(pm_same), jnp.asarray(orders), p)
+            s4 = np.asarray(state4)
+            host = {"fp_s": s4[:, 0], "fp_d": s4[:, 1], "t": s4[:, 2],
+                    "idx": s4[:, 3], "w": np.asarray(wmat)}
+            spill_mask = np.asarray(spill)
+            w_sp = np.asarray(w_merged)
+
+        base = self.pools[0].append_batch(host, nl)
+        starts = t_full[[s - s0 for s, _ in spans]]
+        ends = t_full[[e - 1 - s0 for _, e in spans]]
+        self._leaves.extend(starts, ends)
+        self._version += nl
+
+        if spill_mask.any():
+            for i in range(nl):
+                idxs = np.nonzero(spill_mask[i])[0]
+                if not len(idxs):
+                    continue
+                s_hs = hs[i, idxs]
+                s_hd = hd[i, idxs]
+                self.ob.add(1, base + i,
+                            f1s=s_hs & p.fp_mask, f1d=s_hd & p.fp_mask,
+                            bs=(s_hs >> p.F1) % p.d1,
+                            bd=(s_hd >> p.F1) % p.d1,
+                            w=w_sp[i, idxs].astype(np.float64),
+                            t=t[i, idxs])
+        self._maybe_aggregate()
+
+    def _insert_leaves_pallas(self, hs, hd, w, t, valid):
+        """Alg.-1-faithful backend: one Pallas launch, grid over leaves.
+
+        Sequential per-edge placement inside each leaf (no premerge), so
+        results differ from the vector backend by design — this is the
+        paper-faithful mode, compiled on TPU / interpreted elsewhere per
+        ``params.interpret``."""
+        from repro.kernels import ops
+        p = self.params
+        r = p.r if p.use_mmb else 1
+        hs_j, hd_j = jnp.asarray(hs), jnp.asarray(hd)
+        fs = hashing.fingerprint(hs_j, p.F1)
+        fd = hashing.fingerprint(hd_j, p.F1)
+        rows = cmatrix.chain_from_base(
+            hashing.address(hs_j, p.F1, p.d1), r, p.d1)
+        cols = cmatrix.chain_from_base(
+            hashing.address(hd_j, p.F1, p.d1), r, p.d1)
+        nodes = cmatrix.make_nodes(hs.shape[0], p.d1, p.b)
+        nodes, spill_mask = ops.leaf_insert_batched(
+            nodes, fs, fd, rows, cols, jnp.asarray(w), jnp.asarray(t),
+            jnp.asarray(valid), r=r, interpret=p.interpret)
+        host = {name: np.asarray(getattr(nodes, name))
+                for name in NodeState._fields}
+        mask = np.asarray(spill_mask).astype(bool) & valid
+        return host, mask, w          # no premerge: spill weights are raw
+
+    # ------------------------------------------------------------------
     # aggregation cascade
     # ------------------------------------------------------------------
 
@@ -299,29 +500,156 @@ class HiggsSketch(LegacyQueryMixin):
                 return                              # fingerprints exhausted
             pool = self.pools[level - 1]
             parent_n = self.pools[level].n if level < len(self.pools) else 0
-            if pool.n - parent_n * p.theta < p.theta:
+            n_ready = pool.n // p.theta - parent_n
+            if n_ready <= 0:
                 return
             if level >= len(self.pools):
                 self.pools.append(_LevelPool(p.d(level + 1), p.b))
-            while self.pools[level - 1].n - self.pools[level].n * p.theta \
-                    >= p.theta:
-                u = self.pools[level].n             # parent index to build
-                child_ids = np.arange(u * p.theta, (u + 1) * p.theta)
-                children, _ = pool.gather(child_ids, p.theta)
-                ob_cols = self._gather_child_obs(level, child_ids)
-                parent, spill, n_spill = cmatrix.aggregate_children(
-                    children, *ob_cols, p, level)
-                self.pools[level].append(parent)
-                k = int(n_spill)
-                if k:
-                    self.ob.add(level + 1, u,
-                                f1s=np.asarray(spill["f1s"][:k]),
-                                f1d=np.asarray(spill["f1d"][:k]),
-                                bs=np.asarray(spill["base_s"][:k]),
-                                bd=np.asarray(spill["base_d"][:k]),
-                                w=np.asarray(spill["w"][:k], np.float64),
-                                t=np.zeros((k,), np.uint32))
+            if p.batched_ingest:
+                self._build_parents_batched(level, parent_n, n_ready)
+            else:
+                self._build_parents_serial(level)
             level += 1
+
+    def _build_parents_serial(self, level: int) -> None:
+        """Reference path: one ``aggregate_children`` launch per parent."""
+        p = self.params
+        pool = self.pools[level - 1]
+        while self.pools[level - 1].n - self.pools[level].n * p.theta \
+                >= p.theta:
+            u = self.pools[level].n                 # parent index to build
+            child_ids = np.arange(u * p.theta, (u + 1) * p.theta)
+            children, _ = pool.gather(child_ids, p.theta)
+            ob_cols = self._gather_child_obs(level, child_ids)
+            parent, spill, n_spill = cmatrix.aggregate_children(
+                children, *ob_cols, p, level)
+            self.pools[level].append(parent)
+            k = int(n_spill)
+            if k:
+                self.ob.add(level + 1, u,
+                            f1s=np.asarray(spill["f1s"][:k]),
+                            f1d=np.asarray(spill["f1d"][:k]),
+                            bs=np.asarray(spill["base_s"][:k]),
+                            bd=np.asarray(spill["base_d"][:k]),
+                            w=np.asarray(spill["w"][:k], np.float64),
+                            t=np.zeros((k,), np.uint32))
+
+    def _build_parents_batched(self, level: int, u0: int, m: int) -> None:
+        """Build all ``m`` ready parents at a level with one vmapped
+        ``aggregate_children_pre`` launch: child entries are gathered from
+        the host pool, leaf coordinates recovered and parent-level probe
+        chains + per-round sort orders computed in numpy, so the device
+        does pure sort-free placement."""
+        p = self.params
+        theta = p.theta
+        pool = self.pools[level - 1]
+        arrs = pool.arrs
+        sl = slice(u0 * theta, (u0 + m) * theta)
+        d = pool.d
+        per = theta * d * d * pool.b
+
+        e_fs = arrs["fp_s"][sl].reshape(m, per)
+        e_fd = arrs["fp_d"][sl].reshape(m, per)
+        e_w = arrs["w"][sl].reshape(m, per)
+        e_idx = arrs["idx"][sl].reshape(m, per)
+        grid = np.broadcast_to(
+            np.arange(d, dtype=np.uint32)[:, None, None],
+            (d, d, pool.b))
+        e_row = np.broadcast_to(grid[None], (theta,) + grid.shape)\
+            .reshape(1, per)
+        e_col = np.broadcast_to(grid.transpose(1, 0, 2)[None],
+                                (theta,) + grid.shape).reshape(1, per)
+        e_row = np.broadcast_to(e_row, (m, per))
+        e_col = np.broadcast_to(e_col, (m, per))
+        e_valid = e_fs != EMPTY
+
+        f1s, base_s = cmatrix.host_recover_leaf_coords(
+            e_row, e_fs, e_idx, level, p, "s")
+        f1d, base_d = cmatrix.host_recover_leaf_coords(
+            e_col, e_fd, e_idx, level, p, "d")
+        w_all = e_w.astype(np.float32)
+
+        ob = self._gather_child_obs_stacked(level, u0, m)
+        if ob is not None:
+            f1s = np.concatenate([f1s, ob["f1s"]], axis=1)
+            f1d = np.concatenate([f1d, ob["f1d"]], axis=1)
+            base_s = np.concatenate([base_s, ob["bs"]], axis=1)
+            base_d = np.concatenate([base_d, ob["bd"]], axis=1)
+            w_all = np.concatenate([w_all, ob["w"]], axis=1)
+            e_valid = np.concatenate([e_valid, ob["valid"]], axis=1)
+
+        plevel = level + 1
+        fp_s_p, rows_p = cmatrix.host_coords_at_level(f1s, base_s, plevel, p)
+        fp_d_p, cols_p = cmatrix.host_coords_at_level(f1d, base_d, plevel, p)
+        # EMPTY entries recover garbage coordinates; zero them so host
+        # indexing stays in bounds (they are never active — the device
+        # path relied on XLA's gather clamping for the same items)
+        rows_p = np.where(e_valid[..., None], rows_p, np.uint32(0))
+        cols_p = np.where(e_valid[..., None], cols_p, np.uint32(0))
+        r = p.r if p.use_mmb else 1
+        orders = cmatrix.host_round_orders(rows_p, cols_p, p.d(plevel), r)
+
+        if self._backend == "vector":
+            mp = _pow2_pad(m, lo=1)                # bound jit shape variety
+            if mp != m:
+                def pad0(a):
+                    z = np.zeros((mp - m,) + a.shape[1:], a.dtype)
+                    return np.concatenate([a, z], axis=0)
+                fp_s_p, fp_d_p, rows_p, cols_p, w_all, e_valid, orders = (
+                    pad0(a) for a in (fp_s_p, fp_d_p, rows_p, cols_p,
+                                      w_all, e_valid, orders))
+            state4, wmat, spill = cmatrix.aggregate_children_pre(
+                jnp.asarray(fp_s_p), jnp.asarray(fp_d_p),
+                jnp.asarray(rows_p), jnp.asarray(cols_p),
+                jnp.asarray(w_all), jnp.asarray(e_valid),
+                jnp.asarray(orders), p, level)
+        else:
+            state4, wmat, spill = cmatrix.aggregate_children_host(
+                fp_s_p, fp_d_p, rows_p, cols_p, w_all, e_valid, orders,
+                p, level)
+        s4 = np.asarray(state4)
+        host = {"fp_s": s4[:, 0], "fp_d": s4[:, 1], "t": s4[:, 2],
+                "idx": s4[:, 3], "w": np.asarray(wmat)}
+        self.pools[level].append_batch(host, m)
+        spill_h = np.asarray(spill)
+        if not spill_h.any():
+            return
+        for i in range(m):
+            idxs = np.nonzero(spill_h[i])[0]
+            if len(idxs):
+                self.ob.add(level + 1, u0 + i,
+                            f1s=f1s[i, idxs], f1d=f1d[i, idxs],
+                            bs=base_s[i, idxs], bd=base_d[i, idxs],
+                            w=w_all[i, idxs].astype(np.float64),
+                            t=np.zeros((len(idxs),), np.uint32))
+
+    def _gather_child_obs_stacked(self, level: int, u0: int, m: int):
+        """Overflow columns for ``m`` theta-blocks of children as stacked
+        (m, ob_pad) host arrays; ``None`` when no child has OB entries."""
+        theta = self.params.theta
+        recs = [self.ob.get(level, c)
+                for c in range(u0 * theta, (u0 + m) * theta)]
+        totals = [sum(len(r["w"]) for r in recs[i * theta:(i + 1) * theta]
+                      if r) for i in range(m)]
+        if not any(totals):
+            return None
+        pad = _pow2_pad(max(totals), lo=16)
+        out = {k: np.zeros((m, pad), np.uint32)
+               for k in ("f1s", "f1d", "bs", "bd")}
+        out["w"] = np.zeros((m, pad), np.float32)
+        out["valid"] = np.zeros((m, pad), bool)
+        for i in range(m):
+            off = 0
+            for rec in recs[i * theta:(i + 1) * theta]:
+                if not rec:
+                    continue
+                n = len(rec["w"])
+                for k in ("f1s", "f1d", "bs", "bd"):
+                    out[k][i, off:off + n] = rec[k]
+                out["w"][i, off:off + n] = rec["w"]
+                out["valid"][i, off:off + n] = True
+                off += n
+        return out
 
     def _gather_child_obs(self, level: int, child_ids: np.ndarray):
         recs = [self.ob.get(level, int(c)) for c in child_ids]

@@ -23,6 +23,15 @@ class HiggsParams:
     use_mmb: bool = True    # multiple-mapping-buckets optimization
     use_ob: bool = True     # overflow blocks (lossless spill)
     entry_bytes: float = 0.0  # space accounting override; 0 => computed
+    batched_ingest: bool = True   # multi-leaf batched drain (False = the
+    #                               per-leaf reference path)
+    insert_backend: str = "auto"  # "auto" -> "host" on CPU backends,
+    #                               "vector" on TPU.  "vector" = vmapped
+    #                               device placement, "host" = numpy
+    #                               placement with the same phases,
+    #                               "pallas" = sequential Alg.-1 kernel
+    interpret: bool | None = None   # Pallas interpret mode; None = auto
+    #                                 (compile on TPU, interpret elsewhere)
 
     def __post_init__(self) -> None:
         if self.d1 & (self.d1 - 1):
@@ -32,6 +41,14 @@ class HiggsParams:
             raise ValueError("theta must be a power of four")
         if self.F1 <= 0 or self.b <= 0 or self.r <= 0:
             raise ValueError("F1, b, r must be positive")
+        if self.insert_backend not in ("auto", "vector", "host", "pallas"):
+            raise ValueError("insert_backend must be 'auto', 'vector', "
+                             "'host', or 'pallas'")
+        if self.insert_backend == "pallas" and not (self.use_ob and
+                                                    self.batched_ingest):
+            raise ValueError("the pallas insert backend requires use_ob "
+                             "and batched_ingest (spills must go to "
+                             "overflow blocks, not recursive leaves)")
 
     @property
     def R(self) -> int:

@@ -8,7 +8,8 @@ order is preserved exactly (fori_loop), making this the bit-faithful
 reference path; the vectorized chunk path (``cmatrix.insert_chunk``) is
 the throughput-oriented alternative (DESIGN.md §3).
 
-Layout: SoA refs, all blocks whole (grid=()); matrix refs are
+Layout: SoA refs, all blocks whole (grid=() for one leaf); the batched
+variant grids over stacked leaves, one program per leaf.  Matrix refs are
 input/output aliased so the update is in-place in VMEM.
 """
 from __future__ import annotations
@@ -20,6 +21,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.cmatrix import EMPTY, NodeState
+
+
+def default_interpret() -> bool:
+    """Auto-detected Pallas mode: compile to Mosaic on TPU, interpret on
+    CPU/other backends (shared by every kernel wrapper; callers thread an
+    explicit override via ``HiggsParams.interpret``)."""
+    return jax.default_backend() != "tpu"
 
 
 def _kernel(fs_ref, fd_ref, rows_ref, cols_ref, w_ref, t_ref, valid_ref,
@@ -78,11 +86,13 @@ def _kernel(fs_ref, fd_ref, rows_ref, cols_ref, w_ref, t_ref, valid_ref,
 
 
 def leaf_insert_pallas(node: NodeState, fs, fd, rows, cols, w, t, valid,
-                       *, r: int, interpret: bool = True):
+                       *, r: int, interpret: bool | None = None):
     """Run the faithful sequential insert kernel.
 
     Returns (NodeState', spill mask (n,) int32).
     """
+    if interpret is None:
+        interpret = default_interpret()
     n = fs.shape[0]
     d, _, b = node.fp_s.shape
     valid_i = jnp.asarray(valid, jnp.int32)
@@ -107,4 +117,102 @@ def leaf_insert_pallas(node: NodeState, fs, fd, rows, cols, w, t, valid,
         jnp.asarray(rows, jnp.int32), jnp.asarray(cols, jnp.int32),
         jnp.asarray(w, jnp.float32), jnp.asarray(t, jnp.uint32), valid_i,
         node.fp_s, node.fp_d, node.w, node.t, node.idx)
+    return NodeState(fps, fpd, wm, tm, idxm), spill
+
+
+def _kernel_batched(fs_ref, fd_ref, rows_ref, cols_ref, w_ref, t_ref,
+                    valid_ref, fps_in, fpd_in, wm_in, tm_in, idx_in,
+                    fps_ref, fpd_ref, wm_ref, tm_ref, idx_ref, spill_ref,
+                    *, r: int, n: int):
+    # one program per leaf: every ref is that leaf's block (leading dim 1)
+    del fps_in, fpd_in, wm_in, tm_in, idx_in
+
+    def edge_body(e, _):
+        fs = fs_ref[0, e]
+        fd = fd_ref[0, e]
+        wv = w_ref[0, e]
+        tv = t_ref[0, e]
+        is_valid = valid_ref[0, e] != 0
+
+        def probe_body(k, done):
+            i = k // r
+            j = k % r
+            row = rows_ref[0, e, i]
+            col = cols_ref[0, e, j]
+            bfs = fps_ref[0, row, col, :]
+            bfd = fpd_ref[0, row, col, :]
+            bw = wm_ref[0, row, col, :]
+            bt = tm_ref[0, row, col, :]
+            bidx = idx_ref[0, row, col, :]
+
+            match = (bfs == fs) & (bfd == fd) & (bt == tv) & (bfs != EMPTY)
+            has_match = jnp.any(match)
+            mslot = jnp.argmax(match)
+            empty = bfs == EMPTY
+            has_empty = jnp.any(empty)
+            eslot = jnp.argmax(empty)
+
+            do_merge = (~done) & has_match
+            do_insert = (~done) & (~has_match) & has_empty
+            slot = jnp.where(do_merge, mslot, eslot)
+            onehot = (jax.lax.iota(jnp.int32, bfs.shape[0]) == slot)
+            write = do_merge | do_insert
+            ins = do_insert & onehot
+
+            wm_ref[0, row, col, :] = jnp.where(write & onehot, bw + wv, bw)
+            fps_ref[0, row, col, :] = jnp.where(ins, fs, bfs)
+            fpd_ref[0, row, col, :] = jnp.where(ins, fd, bfd)
+            tm_ref[0, row, col, :] = jnp.where(ins, tv, bt)
+            idx_ref[0, row, col, :] = jnp.where(ins, jnp.uint32(k), bidx)
+            return done | write
+
+        done = jax.lax.fori_loop(0, r * r, probe_body, ~is_valid)
+        spill_ref[0, e] = jnp.where(is_valid & ~done, 1, 0).astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, n, edge_body, 0)
+
+
+def leaf_insert_batched_pallas(nodes: NodeState, fs, fd, rows, cols, w, t,
+                               valid, *, r: int,
+                               interpret: bool | None = None):
+    """Sequential Alg.-1 insertion for a stacked batch of leaves in ONE
+    launch with ``grid=(n_leaves,)`` — program l owns leaf l's matrix and
+    chunk blocks in VMEM.  Per-leaf results are identical to
+    :func:`leaf_insert_pallas`.
+
+    nodes: stacked (L, d, d, b) NodeState; fs/fd/w/t/valid: (L, n);
+    rows/cols: (L, n, r).  Returns (stacked NodeState', (L, n) int32).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    L, n = fs.shape
+    d, _, b = nodes.fp_s.shape[1:]
+    valid_i = jnp.asarray(valid, jnp.int32)
+    mat_spec = pl.BlockSpec((1, d, d, b), lambda l: (l, 0, 0, 0))
+    vec_spec = pl.BlockSpec((1, n), lambda l: (l, 0))
+    chain_spec = pl.BlockSpec((1, n, r), lambda l: (l, 0, 0))
+    out_shapes = (
+        jax.ShapeDtypeStruct(nodes.fp_s.shape, jnp.uint32),
+        jax.ShapeDtypeStruct(nodes.fp_d.shape, jnp.uint32),
+        jax.ShapeDtypeStruct(nodes.w.shape, jnp.float32),
+        jax.ShapeDtypeStruct(nodes.t.shape, jnp.uint32),
+        jax.ShapeDtypeStruct(nodes.idx.shape, jnp.uint32),
+        jax.ShapeDtypeStruct((L, n), jnp.int32),
+    )
+    fn = pl.pallas_call(
+        functools.partial(_kernel_batched, r=r, n=n),
+        grid=(L,),
+        in_specs=[vec_spec, vec_spec, chain_spec, chain_spec, vec_spec,
+                  vec_spec, vec_spec] + [mat_spec] * 5,
+        out_specs=(mat_spec,) * 5 + (vec_spec,),
+        out_shape=out_shapes,
+        input_output_aliases={7: 0, 8: 1, 9: 2, 10: 3, 11: 4},
+        interpret=interpret,
+    )
+    fps, fpd, wm, tm, idxm, spill = fn(
+        jnp.asarray(fs, jnp.uint32), jnp.asarray(fd, jnp.uint32),
+        jnp.asarray(rows, jnp.int32), jnp.asarray(cols, jnp.int32),
+        jnp.asarray(w, jnp.float32), jnp.asarray(t, jnp.uint32), valid_i,
+        nodes.fp_s, nodes.fp_d, nodes.w, nodes.t, nodes.idx)
     return NodeState(fps, fpd, wm, tm, idxm), spill

@@ -17,9 +17,8 @@ from repro.core.cmatrix import NodeState
 from repro.kernels import leaf_insert as _li
 from repro.kernels import probe as _pr
 
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+# shared auto-detect (kept under the old private name for callers)
+_default_interpret = _li.default_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("r", "interpret"))
@@ -29,6 +28,16 @@ def leaf_insert(node: NodeState, fs, fd, rows, cols, w, t, valid, *,
         interpret = _default_interpret()
     return _li.leaf_insert_pallas(node, fs, fd, rows, cols, w, t, valid,
                                   r=r, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("r", "interpret"))
+def leaf_insert_batched(nodes: NodeState, fs, fd, rows, cols, w, t, valid,
+                        *, r: int, interpret: bool | None = None):
+    """One grid-over-leaves launch for a stacked (L, n) chunk batch."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _li.leaf_insert_batched_pallas(nodes, fs, fd, rows, cols, w, t,
+                                          valid, r=r, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("match_time", "interpret"))

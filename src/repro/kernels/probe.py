@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.cmatrix import NodeState
+from repro.kernels.leaf_insert import default_interpret
 
 
 def _edge_kernel(mask_ref, fs_ref, fd_ref, rows_ref, cols_ref, ts_ref,
@@ -104,9 +105,12 @@ def _row_tile(d: int) -> int:
 
 
 def edge_probe_pallas(nodes: NodeState, node_mask, fs, fd, rows, cols,
-                      ts, te, *, match_time: bool, interpret: bool = True):
+                      ts, te, *, match_time: bool,
+                      interpret: bool | None = None):
     """(q,) sums of matching entry weights; Pallas twin of
     :func:`repro.core.cmatrix.probe_edge`."""
+    if interpret is None:
+        interpret = default_interpret()
     m, d, _, b = nodes.fp_s.shape
     q, r = rows.shape
     tr = _row_tile(d)
@@ -134,9 +138,11 @@ def edge_probe_pallas(nodes: NodeState, node_mask, fs, fd, rows, cols,
 
 def vertex_probe_pallas(nodes: NodeState, node_mask, fv, rows, ts, te, *,
                         direction: str, match_time: bool,
-                        interpret: bool = True):
+                        interpret: bool | None = None):
     """(q,) sums for vertex queries; Pallas twin of
     :func:`repro.core.cmatrix.probe_vertex`."""
+    if interpret is None:
+        interpret = default_interpret()
     m, d, _, b = nodes.fp_s.shape
     q, r = rows.shape
     tr = _row_tile(d)

@@ -27,21 +27,36 @@ class StreamPipeline:
     def __len__(self) -> int:
         return len(self.arrays[0])
 
-    def __iter__(self) -> Iterator[tuple]:
+    def _iter_batches(self, batch: int) -> Iterator[tuple]:
         n = len(self)
         while self.cursor < n:
-            sl = slice(self.cursor, min(self.cursor + self.batch, n))
+            sl = slice(self.cursor, min(self.cursor + batch, n))
             # advance BEFORE yielding so a checkpointed cursor never
             # replays a batch already handed out
             self.cursor = sl.stop
             yield tuple(a[sl] for a in self.arrays)
 
+    def __iter__(self) -> Iterator[tuple]:
+        return self._iter_batches(self.batch)
+
     def feed(self, sketch: "GraphSummary",
              progress: Callable[[int], None] | None = None,
-             flush: bool = True) -> None:
-        """Feed every remaining batch into any ``GraphSummary``."""
-        for batch in self:
-            sketch.insert(*batch)
+             flush: bool = True, align: bool = True) -> None:
+        """Feed every remaining batch into any ``GraphSummary``.
+
+        With ``align`` (default), the batch size is rounded to a whole
+        number of the sketch's leaves (``params.chunk_size``), so each
+        ``insert`` hands the batched ingestion engine only complete
+        leaves — one multi-leaf drain per call, no partial-leaf carry.
+        The final sketch is identical either way (leaf boundaries depend
+        only on the item sequence); alignment just batches better.
+        """
+        batch = self.batch
+        chunk = getattr(getattr(sketch, "params", None), "chunk_size", 0)
+        if align and chunk:
+            batch = max(chunk, self.batch // chunk * chunk)
+        for b in self._iter_batches(batch):
+            sketch.insert(*b)
             if progress:
                 progress(self.cursor)
         if flush:
@@ -63,10 +78,16 @@ class StreamPipeline:
             json.dump({"cursor": self.cursor, "batch": self.batch}, fh)
 
     def restore_cursor(self, path: str) -> None:
+        """Restore both cursor AND batch size.  The batch governs where
+        future cursors can land; silently keeping a different local
+        ``batch`` made resumed runs checkpoint at positions the original
+        schedule could never produce."""
         if os.path.exists(path):
             with open(path) as fh:
                 meta = json.load(fh)
             self.cursor = int(meta["cursor"])
+            if "batch" in meta:
+                self.batch = int(meta["batch"])
 
 
 def token_transition_stream(tokens: np.ndarray, step: int):
@@ -82,17 +103,15 @@ def token_transition_stream(tokens: np.ndarray, step: int):
 
 def expert_coactivation_stream(expert_ids: np.ndarray, step: int):
     """MoE integration: per-token top-k expert sets (N, k) become pairwise
-    expert co-activation edges at time=step."""
+    expert co-activation edges at time=step.
+
+    Vectorized pair construction (the k^2 Python append loop scaled badly
+    for large top-k): pair-major ordering matches the original loop."""
     e = np.asarray(expert_ids)
     n, k = e.shape
-    srcs, dsts = [], []
-    for i in range(k):
-        for j in range(k):
-            if i != j:
-                srcs.append(e[:, i])
-                dsts.append(e[:, j])
-    src = np.concatenate(srcs).astype(np.uint32)
-    dst = np.concatenate(dsts).astype(np.uint32)
+    ii, jj = np.nonzero(~np.eye(k, dtype=bool))     # ordered (i, j) pairs
+    src = e[:, ii].T.reshape(-1).astype(np.uint32)
+    dst = e[:, jj].T.reshape(-1).astype(np.uint32)
     w = np.ones(src.shape, np.float32)
     t = np.full(src.shape, step, np.uint32)
     return src, dst, w, t

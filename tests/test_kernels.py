@@ -137,6 +137,42 @@ def test_leaf_insert_bitwise_faithful(d, b, r, n):
     np.testing.assert_array_equal(np.asarray(got_spill, bool), want_spill)
 
 
+@pytest.mark.parametrize("L,d,b,r,n", [
+    (1, 8, 2, 2, 40),
+    (3, 8, 2, 2, 64),
+    (4, 16, 3, 4, 128),
+])
+def test_leaf_insert_batched_grid_matches_per_leaf(L, d, b, r, n):
+    """grid=(L,) batched kernel == L separate grid=() launches."""
+    rng = np.random.default_rng(L * 100 + d)
+    F = 12
+    hs = rng.integers(0, 1 << 32, (L, n), dtype=np.uint64).astype(np.uint32)
+    hd = rng.integers(0, 1 << 32, (L, n), dtype=np.uint64).astype(np.uint32)
+    fs, fd = hs & ((1 << F) - 1), hd & ((1 << F) - 1)
+    rows = np.asarray(cmatrix.chain_from_base((hs >> F) % d, r, d))
+    cols = np.asarray(cmatrix.chain_from_base((hd >> F) % d, r, d))
+    w = rng.integers(1, 9, (L, n)).astype(np.float32)
+    t = np.sort(rng.integers(0, 50, (L, n)).astype(np.uint32), axis=1)
+    valid = rng.random((L, n)) < 0.9
+
+    nodes = cmatrix.make_nodes(L, d, b)
+    got, got_spill = ops.leaf_insert_batched(
+        nodes, jnp.asarray(fs), jnp.asarray(fd), jnp.asarray(rows),
+        jnp.asarray(cols), jnp.asarray(w), jnp.asarray(t),
+        jnp.asarray(valid), r=r, interpret=True)
+    for l in range(L):
+        want, want_spill = ops.leaf_insert(
+            cmatrix.make_node(d, b), jnp.asarray(fs[l]), jnp.asarray(fd[l]),
+            jnp.asarray(rows[l]), jnp.asarray(cols[l]), jnp.asarray(w[l]),
+            jnp.asarray(t[l]), jnp.asarray(valid[l]), r=r, interpret=True)
+        for name in NodeState._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, name))[l],
+                np.asarray(getattr(want, name)), err_msg=f"leaf {l}/{name}")
+        np.testing.assert_array_equal(np.asarray(got_spill)[l],
+                                      np.asarray(want_spill))
+
+
 def test_insert_then_probe_roundtrip():
     """Kernel-inserted entries must be found by the kernel probes."""
     rng = np.random.default_rng(0)
