@@ -88,44 +88,122 @@ def run(n_edges: int = 100_000, seed: int = 0):
                     f"edges_per_s={half / dt:.0f}")
 
 
-def smoke(n_edges: int = 30_000, seed: int = 0, min_speedup: float = 1.5):
-    """CI gate: batched must stay >= min_speedup x serial AND produce the
-    bit-identical sketch."""
+def _assert_sketches_identical(a, b, tag: str) -> None:
+    """Bit-identity: leaf keys, every pool level, and the overflow store."""
     from repro.core.cmatrix import NodeState
 
-    stream = lkml_like_stream(n_edges=n_edges, seed=seed)
-    serial_s, batched_s, sk = serial_vs_batched(stream)
-    speedup = serial_s / batched_s
-    a, b = sk["serial"], sk["batched"]
     assert np.array_equal(a.leaf_starts, b.leaf_starts), \
-        "smoke: leaf start keys diverged"
+        f"{tag}: leaf start keys diverged"
     assert np.array_equal(a.leaf_ends, b.leaf_ends), \
-        "smoke: leaf end keys diverged"
+        f"{tag}: leaf end keys diverged"
     for lvl, (pa, pb) in enumerate(zip(a.pools, b.pools)):
-        assert pa.n == pb.n, f"smoke: level {lvl + 1} node count diverged"
+        assert pa.n == pb.n, f"{tag}: level {lvl + 1} node count diverged"
         for name in NodeState._fields:
             assert np.array_equal(pa.arrs[name][:pa.n],
                                   pb.arrs[name][:pb.n]), \
-                f"smoke: level {lvl + 1} {name} diverged"
+                f"{tag}: level {lvl + 1} {name} diverged"
     da, db = a.ob.data, b.ob.data
-    assert set(da) == set(db), "smoke: overflow keys diverged"
+    assert set(da) == set(db), f"{tag}: overflow keys diverged"
     for key in da:
         for f in da[key]:
             assert np.array_equal(da[key][f], db[key][f]), \
-                f"smoke: overflow {key}/{f} diverged"
+                f"{tag}: overflow {key}/{f} diverged"
+
+
+def smoke(n_edges: int = 30_000, seed: int = 0, min_speedup: float = 1.5):
+    """CI gate: batched must stay >= min_speedup x serial AND produce the
+    bit-identical sketch."""
+    stream = lkml_like_stream(n_edges=n_edges, seed=seed)
+    serial_s, batched_s, sk = serial_vs_batched(stream)
+    speedup = serial_s / batched_s
+    _assert_sketches_identical(sk["serial"], sk["batched"], "smoke")
     assert speedup >= min_speedup, (
         f"smoke: batched ingestion regressed to {speedup:.2f}x serial "
         f"(floor {min_speedup}x)")
     print(f"smoke OK: batched={speedup:.2f}x serial, sketches identical")
 
 
+def resume_smoke(n_edges: int = 30_000, seed: int = 0,
+                 kill_at: int | None = None):
+    """CI gate for crash-consistent persistence: ingest with periodic
+    atomic sketch+cursor snapshots, kill at a random batch, resume into a
+    FRESH pipeline + sketch, and assert the final sketch is bit-identical
+    (pools, overflow store, leaf intervals, batched query answers) to an
+    uninterrupted reference run over the same stream."""
+    import tempfile
+
+    from repro.api import EdgeQuery, VertexQuery
+    from repro.core.higgs import HiggsSketch
+    from repro.core.params import HiggsParams
+    from repro.stream.pipeline import StreamPipeline
+
+    stream = lkml_like_stream(n_edges=n_edges, seed=seed)
+    p = HiggsParams(d1=16, F1=19)
+    batch = 4096
+    # run_resumable feeds leaf-aligned batches; count those, not the
+    # nominal ones, or the kill point may land past the end of the run
+    aligned = max(p.chunk_size, batch // p.chunk_size * p.chunk_size)
+    n_batches = -(-n_edges // aligned)
+    assert n_batches >= 2, \
+        f"resume smoke needs >= 2 batches to kill mid-stream " \
+        f"(n_edges={n_edges}, aligned batch={aligned})"
+    if kill_at is None:
+        kill_at = int(np.random.default_rng().integers(1, n_batches))
+    print(f"resume smoke: killing after batch {kill_at}/{n_batches}")
+
+    ref = HiggsSketch(p)
+    StreamPipeline(*stream, batch=batch).feed(ref)
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        pipe = StreamPipeline(*stream, batch=batch)
+        sk = HiggsSketch(p)
+        n_calls = [0]
+
+        def stop():
+            n_calls[0] += 1
+            return n_calls[0] >= kill_at
+
+        pipe.run_resumable(sk, ckpt_dir, every=2, should_stop=stop)
+        assert pipe.cursor < len(pipe), \
+            "resume smoke: run completed before the kill fired"
+
+        pipe2 = StreamPipeline(*stream, batch=batch)
+        sk2 = HiggsSketch(p)
+        pipe2.run_resumable(sk2, ckpt_dir, every=2, keep=3)
+        assert pipe2.cursor == len(pipe2), "resume smoke: did not finish"
+
+    _assert_sketches_identical(ref, sk2, "resume smoke")
+    src, dst, _, t = stream
+    t_max = int(t[-1])
+    queries = [EdgeQuery(src[:256], dst[:256], t_max // 4, 3 * t_max // 4),
+               EdgeQuery(src[:64], dst[:64], 0, t_max),
+               VertexQuery(src[:64], t_max // 8, t_max, "out"),
+               VertexQuery(dst[:64], 0, t_max // 2, "in")]
+    va = ref.query(queries).values
+    vb = sk2.query(queries).values
+    for i, (x, y) in enumerate(zip(va, vb)):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), \
+            f"resume smoke: query {i} answers diverged"
+    print(f"resume smoke OK: kill at batch {kill_at}/{n_batches}, "
+          f"resumed sketch bit-identical to uninterrupted run")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny ingestion regression gate (CI)")
+    ap.add_argument("--resume", action="store_true",
+                    help="kill-and-resume persistence gate (CI); with "
+                         "--smoke runs only the resume gate")
+    ap.add_argument("--kill-at", type=int, default=0,
+                    help="deterministic kill batch for --resume "
+                         "(default: random)")
     ap.add_argument("--n-edges", type=int, default=0)
     args = ap.parse_args()
-    if args.smoke:
+    if args.resume:
+        resume_smoke(n_edges=args.n_edges or 30_000,
+                     kill_at=args.kill_at or None)
+    elif args.smoke:
         smoke(n_edges=args.n_edges or 30_000)
     else:
         run(n_edges=args.n_edges or 100_000)

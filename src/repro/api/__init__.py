@@ -10,16 +10,17 @@
 """
 from repro.api.planner import QueryPlanner
 from repro.api.protocol import (GraphSummary, LegacyQueryMixin,
-                                PointwiseQueryMixin)
+                                PointwiseQueryMixin, SnapshotMixin)
 from repro.api.queries import (EdgeQuery, PathQuery, Query, QueryBatch,
                                QueryResult, QueryStats, SubgraphQuery,
                                VertexQuery)
-from repro.api.registry import available_summaries, make_summary, register
+from repro.api.registry import (available_summaries, make_summary, register,
+                                restore_summary)
 
 __all__ = [
     "EdgeQuery", "VertexQuery", "PathQuery", "SubgraphQuery",
     "Query", "QueryBatch", "QueryResult", "QueryStats",
     "GraphSummary", "LegacyQueryMixin", "PointwiseQueryMixin",
-    "QueryPlanner",
-    "make_summary", "register", "available_summaries",
+    "SnapshotMixin", "QueryPlanner",
+    "make_summary", "register", "available_summaries", "restore_summary",
 ]

@@ -52,22 +52,38 @@ class QueryPlanner:
     # ------------------------------------------------------------------
 
     def plan(self, ts: int, te: int, stats: QueryStats):
-        """Memoized boundary search; invalidated when the tree mutates."""
+        """Memoized boundary search; invalidated when the tree mutates.
+
+        Eviction is LRU: a hit re-inserts the plan at the back of the
+        (insertion-ordered) dict, so steady-state serving of a few hot
+        ranges keeps them resident no matter how many cold ranges churn
+        through — evicting the oldest-*inserted* plan used to drop the
+        hottest entry first.
+        """
         version = self.sketch.structure_version
         if version != self._cache_version:
             self._plan_cache.clear()
             self._cache_version = version
         key = (int(ts), int(te))
-        cached = self._plan_cache.get(key)
+        cached = self._plan_cache.pop(key, None)
         if cached is None:
             cached = self.sketch.boundary_search(ts, te)
             if len(self._plan_cache) >= self.MAX_CACHED_PLANS:
                 self._plan_cache.pop(next(iter(self._plan_cache)))
-            self._plan_cache[key] = cached
             stats.boundary_searches += 1
         else:
             stats.plan_cache_hits += 1
+        self._plan_cache[key] = cached
         return cached
+
+    def invalidate(self) -> None:
+        """Drop every memoized plan and re-seed the cache epoch from the
+        sketch's current ``structure_version``.  Called after a snapshot
+        restore: the version counter alone cannot be trusted across
+        restores (a different tree can legitimately carry the same
+        count), so restoring must invalidate explicitly."""
+        self._plan_cache.clear()
+        self._cache_version = self.sketch.structure_version
 
     # ------------------------------------------------------------------
     # execution

@@ -14,6 +14,11 @@ adapter mixins that bridge the batched and pointwise query surfaces.
   ``query()`` is the batched planner; the shims are guaranteed to return
   values identical to the batched path because they *are* the batched path
   with a single-element batch.
+* :class:`SnapshotMixin` — default ``save``/``restore`` on top of the
+  ``state_dict()``/``load_state()`` pair each summary implements, using
+  the atomic manifest+npz checkpoint layout (``repro.checkpoint``).  The
+  summary — not the raw stream — is the durable artifact, so every
+  ``GraphSummary`` must round-trip bit-identically through it.
 """
 from __future__ import annotations
 
@@ -49,6 +54,58 @@ class GraphSummary(Protocol):
         """Summary size in bytes per the paper's accounting."""
         ...
 
+    def save(self, directory: str, step: int) -> str:
+        """Snapshot the full summary state atomically; returns the path."""
+        ...
+
+    def restore(self, directory: str, step: int) -> None:
+        """Rebuild this summary bit-identically from a snapshot."""
+        ...
+
+
+class SnapshotMixin:
+    """Default ``save``/``restore`` over the ``state_dict``/``load_state``
+    pair.
+
+    A summary implements:
+
+    * ``snapshot_kind`` — its registry name, recorded in the manifest so
+      ``repro.api.restore_summary`` can rebuild it without knowing the
+      class in advance;
+    * ``state_dict() -> (arrays, meta)`` — a flat ``{key: np.ndarray}``
+      dict of its full state plus a JSON-able ``meta`` dict whose
+      ``meta["config"]`` holds the constructor kwargs;
+    * ``load_state(arrays, meta)`` — the exact inverse: reconfigures the
+      instance from ``meta["config"]`` and overwrites all state, so the
+      restored summary is bit-identical to the saved one (same query
+      answers, same ``space_bytes``, same future-insert behavior).
+
+    ``save`` writes one atomic checkpoint (tmp dir + rename, single
+    manifest) via :func:`repro.checkpoint.save_checkpoint`; a preemption
+    mid-save never corrupts an existing snapshot.
+    """
+
+    snapshot_kind: str
+
+    def state_dict(self):
+        raise NotImplementedError
+
+    def load_state(self, arrays: dict, meta: dict) -> None:
+        raise NotImplementedError
+
+    def save(self, directory: str, step: int) -> str:
+        from repro.checkpoint.store import save_checkpoint
+        arrays, meta = self.state_dict()
+        return save_checkpoint(directory, step, arrays,
+                               metadata={"summary": self.snapshot_kind,
+                                         "state": meta})
+
+    def restore(self, directory: str, step: int | None = None) -> None:
+        from repro.checkpoint.store import load_snapshot
+        arrays, metadata, _ = load_snapshot(directory, step,
+                                            expect_kind=self.snapshot_kind)
+        self.load_state(arrays, metadata["state"])
+
 
 def _dispatch_pointwise(summary, q: Query):
     if isinstance(q, EdgeQuery):
@@ -76,7 +133,7 @@ class _CompoundShims:
         return self.query([SubgraphQuery(edges, ts, te)]).values[0]
 
 
-class PointwiseQueryMixin(_CompoundShims):
+class PointwiseQueryMixin(SnapshotMixin, _CompoundShims):
     """``query()`` for summaries whose native surface is per-kind methods."""
 
     def query(self, queries: QueryBatch) -> QueryResult:
@@ -87,7 +144,7 @@ class PointwiseQueryMixin(_CompoundShims):
         return QueryResult(values, stats)
 
 
-class LegacyQueryMixin(_CompoundShims):
+class LegacyQueryMixin(SnapshotMixin, _CompoundShims):
     """Legacy per-method API as thin shims over batched ``query()``."""
 
     def edge_query(self, src, dst, ts: int, te: int) -> np.ndarray:

@@ -40,6 +40,19 @@ def make_summary(name: str, **kw) -> GraphSummary:
     return _REGISTRY[key](**kw)
 
 
+def restore_summary(directory: str, step: int | None = None) -> GraphSummary:
+    """Rebuild a summary from a snapshot without knowing its class: the
+    manifest records the registry name and constructor config, so
+    ``restore_summary(ckpt_dir)`` reconstructs whatever was saved there
+    (``step=None`` picks the latest snapshot)."""
+    from repro.checkpoint.store import load_snapshot
+    arrays, metadata, _ = load_snapshot(directory, step)
+    state = metadata["state"]
+    summary = make_summary(metadata["summary"], **state.get("config", {}))
+    summary.load_state(arrays, state)
+    return summary
+
+
 def _make_higgs(**kw):
     from repro.core.higgs import HiggsSketch
     from repro.core.params import HiggsParams

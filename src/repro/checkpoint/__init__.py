@@ -1,5 +1,8 @@
 from repro.checkpoint.store import (save_checkpoint, restore_checkpoint,
-                                    latest_step, reshard)
+                                    restore_arrays, read_manifest,
+                                    load_snapshot, latest_step,
+                                    gc_checkpoints, reshard)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "reshard"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "restore_arrays",
+           "read_manifest", "load_snapshot", "latest_step",
+           "gc_checkpoints", "reshard"]

@@ -5,9 +5,15 @@ Layout: <dir>/step_<N>/
   arrays.npz      — flattened leaves (host-gathered)
 
 Writes are atomic (tmp dir + rename) so a preemption mid-write never
-corrupts the latest checkpoint; ``restore_checkpoint`` can re-shard onto
-a *different* mesh (elastic scaling: restart on fewer/more pods —
-``reshard`` just device_puts each leaf with the new NamedSharding).
+corrupts the latest checkpoint; stale ``.tmp_step_*`` directories left
+behind by a crash mid-save are swept on the next ``save_checkpoint``
+(``latest_step`` never sees them, so they would otherwise accumulate
+forever).  ``restore_checkpoint`` can re-shard onto a *different* mesh
+(elastic scaling: restart on fewer/more pods — ``reshard`` just
+device_puts each leaf with the new NamedSharding).  ``restore_arrays``
+is the shape-free variant used by sketch persistence, where the saved
+arrays (pools, overflow columns) grow with the stream and no like-tree
+with matching shapes exists before the restore.
 """
 from __future__ import annotations
 
@@ -26,8 +32,18 @@ def _flatten_with_paths(tree):
     return keys, [leaf for _, leaf in flat], treedef
 
 
+def _sweep_stale_tmp(directory: str) -> None:
+    """Remove ``.tmp_step_*`` leftovers from saves that died mid-write."""
+    if not os.path.isdir(directory):
+        return
+    for d in os.listdir(directory):
+        if d.startswith(".tmp_step_"):
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
 def save_checkpoint(directory: str, step: int, tree, metadata=None) -> str:
     keys, leaves, _ = _flatten_with_paths(tree)
+    _sweep_stale_tmp(directory)
     tmp = os.path.join(directory, f".tmp_step_{step}")
     final = os.path.join(directory, f"step_{step}")
     os.makedirs(tmp, exist_ok=True)
@@ -63,6 +79,75 @@ def latest_step(directory: str) -> int | None:
     steps = [int(d.split("_", 1)[1]) for d in os.listdir(directory)
              if d.startswith("step_")]
     return max(steps) if steps else None
+
+
+def gc_checkpoints(directory: str, keep: int = 3) -> list[int]:
+    """Retention: delete all but the newest ``keep`` step directories
+    (and any stale tmp dirs); returns the steps removed."""
+    if keep < 1:
+        raise ValueError("gc_checkpoints needs keep >= 1")
+    if not os.path.isdir(directory):
+        return []
+    _sweep_stale_tmp(directory)
+    steps = sorted(int(d.split("_", 1)[1]) for d in os.listdir(directory)
+                   if d.startswith("step_"))
+    victims = steps[:-keep]
+    for s in victims:
+        shutil.rmtree(os.path.join(directory, f"step_{s}"),
+                      ignore_errors=True)
+    return victims
+
+
+def read_manifest(directory: str, step: int) -> dict:
+    """The manifest alone (step, keys, dtypes/shapes, metadata) — cheap
+    peek used to identify a snapshot before loading its arrays."""
+    path = os.path.join(directory, f"step_{step}", "manifest.json")
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def restore_arrays(directory: str, step: int):
+    """Restore a flat ``{key: np.ndarray}`` tree without a like-tree.
+
+    Shapes come from the checkpoint itself (manifest dtypes recover the
+    lossless-upcast exotic floats), so this is the entry point for state
+    whose array sizes are data-dependent — sketch snapshots.  Returns
+    ``(arrays, metadata)``.
+    """
+    manifest = read_manifest(directory, step)
+    data = np.load(os.path.join(directory, f"step_{step}", "arrays.npz"))
+    arrays = {}
+    for i, (key, dtype) in enumerate(zip(manifest["keys"],
+                                         manifest["dtypes"])):
+        arrays[key] = data[f"a{i}"].astype(np.dtype(dtype), copy=False)
+    return arrays, manifest["metadata"]
+
+
+def load_snapshot(directory: str, step: int | None = None,
+                  expect_kind: str | None = None):
+    """Load a *summary* snapshot: ``(arrays, metadata, step)``.
+
+    The one place the manifest contract is enforced — ``step=None``
+    resolves to the newest snapshot, the metadata must carry a summary
+    kind + state, and ``expect_kind`` (when given) must match.  Shared
+    by ``SnapshotMixin.restore``, ``restore_summary``, and the stream
+    pipeline's resume path so the three cannot drift.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no snapshots under {directory!r}")
+    arrays, metadata = restore_arrays(directory, step)
+    kind = metadata.get("summary")
+    if kind is None or "state" not in metadata:
+        raise ValueError(f"step {step} under {directory!r} is not a "
+                         f"summary snapshot (no summary/state metadata)")
+    if expect_kind is not None and kind != expect_kind:
+        raise ValueError(
+            f"snapshot step {step} under {directory!r} holds a {kind!r} "
+            f"summary, not {expect_kind!r}; use repro.api.restore_summary "
+            f"to rebuild the right class")
+    return arrays, metadata, step
 
 
 def restore_checkpoint(directory: str, step: int, like_tree,

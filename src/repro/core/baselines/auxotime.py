@@ -104,14 +104,38 @@ class _PetLayer:
     def spills(self) -> int:
         return sum(len(m.spill) for m in self.mats)
 
+    # -- persistence -----------------------------------------------------
+    def state_arrays(self) -> dict:
+        return {f"mat{m}/{k}": a for m, mat in enumerate(self.mats)
+                for k, a in mat.state_arrays().items()}
+
+    def state_meta(self) -> dict:
+        return {"k": int(self.k), "inserted": int(self.inserted),
+                "max_split": int(self.max_split)}
+
+    def load_arrays(self, arrs: dict, meta: dict) -> None:
+        """Restore the PET: the split level ``k`` and insert counter
+        govern when the next proportional split fires, so they must come
+        back exactly for resumed ingestion to match."""
+        self.k = int(meta["k"])
+        self.inserted = int(meta["inserted"])
+        self.max_split = int(meta["max_split"])
+        self.mats = [_FpLayer(self.d, self.b, self.seed)
+                     for _ in range(1 << self.k)]
+        for m, mat in enumerate(self.mats):
+            mat.load_arrays({k: arrs[f"mat{m}/{k}"]
+                             for k in ("key", "w", "spill_k", "spill_w")})
+
 
 class AuxoTime(CompoundQueryMixin):
     name = "AuxoTime"
+    snapshot_kind = "auxotime"
     temporal = True
 
     def __init__(self, l_bits: int = 20, d: int = 48, b: int = 4,
                  F: int = 24, seed: int = 31, cpt: bool = False):
         self.l_bits, self.F, self.cpt = l_bits, F, cpt
+        self.d, self.b = d, b
         self.step = 2 if cpt else 1
         self.levels = list(range(0, l_bits + 1, self.step))
         self.layers = {l: _PetLayer(d, b, seed + l, F=F)
@@ -191,3 +215,27 @@ class AuxoTime(CompoundQueryMixin):
             total += layer.entries() * per_entry
             total += layer.spills() * (per_entry + 8)
         return total
+
+    # -- persistence -----------------------------------------------------
+    def state_dict(self):
+        arrays = {}
+        layers_meta = {}
+        for l, layer in self.layers.items():
+            layers_meta[str(l)] = layer.state_meta()
+            for k, a in layer.state_arrays().items():
+                arrays[f"layer{l}/{k}"] = a
+        meta = {"config": {"l_bits": self.l_bits, "d": self.d,
+                           "b": self.b, "F": self.F, "seed": self.seed,
+                           "cpt": self.cpt},
+                "layers": layers_meta,
+                "probe_counter": int(self.probe_counter)}
+        return arrays, meta
+
+    def load_state(self, arrays: dict, meta: dict) -> None:
+        self.__init__(**meta["config"])
+        for l, layer in self.layers.items():
+            prefix = f"layer{l}/"
+            arrs = {k[len(prefix):]: a for k, a in arrays.items()
+                    if k.startswith(prefix)}
+            layer.load_arrays(arrs, meta["layers"][str(l)])
+        self.probe_counter = int(meta["probe_counter"])

@@ -101,15 +101,34 @@ class _FpLayer:
     def entries_used(self) -> int:
         return int((self.key != _EMPTY).sum()) + len(self.spill)
 
+    # -- persistence -----------------------------------------------------
+    def state_arrays(self) -> dict:
+        """Matrix + spill list as flat arrays.  Spill order is preserved:
+        ``query_vertex`` sums spill weights in dict order, so restoring
+        in a different order would perturb float summation."""
+        n = len(self.spill)
+        return {"key": self.key,
+                "w": self.w,
+                "spill_k": np.fromiter(self.spill.keys(), np.uint64, n),
+                "spill_w": np.fromiter(self.spill.values(), np.float64, n)}
+
+    def load_arrays(self, arrs: dict) -> None:
+        self.key = np.asarray(arrs["key"], np.uint64)
+        self.w = np.asarray(arrs["w"], np.float64)
+        self.spill = dict(zip((int(k) for k in arrs["spill_k"].tolist()),
+                              (float(v) for v in arrs["spill_w"].tolist())))
+
 
 class Horae(CompoundQueryMixin):
     name = "Horae"
+    snapshot_kind = "horae"
     temporal = True
 
     def __init__(self, l_bits: int = 20, d: int = 96, b: int = 4,
                  F: int = 24, seed: int = 11, cpt: bool = False):
         """l_bits: log2 of the maximum stream duration."""
         self.l_bits, self.F, self.cpt = l_bits, F, cpt
+        self.d, self.b = d, b
         self.step = 2 if cpt else 1
         self.levels = list(range(0, l_bits + 1, self.step))
         self.layers = {l: _FpLayer(d, b, seed + l) for l in self.levels}
@@ -193,3 +212,22 @@ class Horae(CompoundQueryMixin):
             total += layer.key.size * per_entry
             total += len(layer.spill) * (per_entry + 8)
         return total
+
+    # -- persistence -----------------------------------------------------
+    def state_dict(self):
+        arrays = {}
+        for l, layer in self.layers.items():
+            for k, a in layer.state_arrays().items():
+                arrays[f"layer{l}/{k}"] = a
+        meta = {"config": {"l_bits": self.l_bits, "d": self.d,
+                           "b": self.b, "F": self.F, "seed": self.seed,
+                           "cpt": self.cpt},
+                "probe_counter": int(self.probe_counter)}
+        return arrays, meta
+
+    def load_state(self, arrays: dict, meta: dict) -> None:
+        self.__init__(**meta["config"])
+        for l, layer in self.layers.items():
+            layer.load_arrays({k: arrays[f"layer{l}/{k}"]
+                               for k in ("key", "w", "spill_k", "spill_w")})
+        self.probe_counter = int(meta["probe_counter"])

@@ -18,6 +18,7 @@ from repro.core.baselines._compound import CompoundQueryMixin
 
 class PGSS(CompoundQueryMixin):
     name = "PGSS"
+    snapshot_kind = "pgss"
     temporal = True
 
     def __init__(self, l_bits: int = 20, m: int = 1 << 18, g: int = 2,
@@ -93,3 +94,18 @@ class PGSS(CompoundQueryMixin):
 
     def space_bytes(self) -> float:
         return (self.edge_c.size + self.vout_c.size + self.vin_c.size) * 4.0
+
+    # -- persistence -----------------------------------------------------
+    def state_dict(self):
+        meta = {"config": {"l_bits": self.l_bits, "m": self.m,
+                           "g": self.g, "seed": self.seed},
+                "probe_counter": int(self.probe_counter)}
+        return {"edge_c": self.edge_c, "vout_c": self.vout_c,
+                "vin_c": self.vin_c}, meta
+
+    def load_state(self, arrays: dict, meta: dict) -> None:
+        self.__init__(**meta["config"])
+        self.edge_c = np.asarray(arrays["edge_c"], np.float64)
+        self.vout_c = np.asarray(arrays["vout_c"], np.float64)
+        self.vin_c = np.asarray(arrays["vin_c"], np.float64)
+        self.probe_counter = int(meta["probe_counter"])

@@ -14,10 +14,11 @@ from repro.core.baselines._compound import CompoundQueryMixin
 
 class TCM(CompoundQueryMixin):
     name = "TCM"
+    snapshot_kind = "tcm"
     temporal = False
 
     def __init__(self, d: int = 256, g: int = 4, seed: int = 7):
-        self.d, self.g = d, g
+        self.d, self.g, self.seed = d, g, seed
         self.seeds = [seed + 0x9E37 * k for k in range(g)]
         self.mat = np.zeros((g, d, d), np.float64)
         self.probe_counter = 0
@@ -59,3 +60,14 @@ class TCM(CompoundQueryMixin):
 
     def space_bytes(self) -> float:
         return self.mat.size * 4.0   # 32-bit counters in a real deployment
+
+    # -- persistence -----------------------------------------------------
+    def state_dict(self):
+        meta = {"config": {"d": self.d, "g": self.g, "seed": self.seed},
+                "probe_counter": int(self.probe_counter)}
+        return {"mat": self.mat}, meta
+
+    def load_state(self, arrays: dict, meta: dict) -> None:
+        self.__init__(**meta["config"])
+        self.mat = np.asarray(arrays["mat"], np.float64)
+        self.probe_counter = int(meta["probe_counter"])

@@ -96,6 +96,17 @@ def make_nodes(n: int, d: int, b: int) -> NodeState:
                      idx=jnp.zeros((n, d, d, b), jnp.uint32))
 
 
+def empty_node_arrays(n: int, d: int, b: int) -> dict[str, np.ndarray]:
+    """``n`` fresh matrices as host numpy field arrays — the level-pool
+    storage layout, shared by pool growth and snapshot restore so both
+    agree on the EMPTY/zero initialization of unused capacity."""
+    shape = (n, d, d, b)
+    return {name: np.full(shape, EMPTY, np.uint32)
+            if name in ("fp_s", "fp_d")
+            else np.zeros(shape, np.float32 if name == "w" else np.uint32)
+            for name in NodeState._fields}
+
+
 # ---------------------------------------------------------------------------
 # placement: the shared (merge, claim) multi-round engine
 # ---------------------------------------------------------------------------

@@ -11,6 +11,7 @@ bottom-up whenever theta nodes of a level complete.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax.numpy as jnp
@@ -41,16 +42,27 @@ class _LevelPool:
         self.arrs: Optional[dict] = None
 
     def _grow(self, new_cap: int) -> None:
-        shape = (new_cap, self.d, self.d, self.b)
-        new = {name: np.full(shape, EMPTY, np.uint32)
-               if name in ("fp_s", "fp_d")
-               else np.zeros(shape, np.float32 if name == "w" else np.uint32)
-               for name in NodeState._fields}
+        new = cmatrix.empty_node_arrays(new_cap, self.d, self.b)
         if self.arrs is not None:
             for name in NodeState._fields:
                 new[name][: self.n] = self.arrs[name][: self.n]
         self.arrs = new
         self.cap = new_cap
+
+    def load(self, arrs: dict, n: int, cap: int | None = None) -> None:
+        """Overwrite this pool with ``n`` snapshot nodes, re-growing to
+        the saved capacity so post-restore allocation behavior matches
+        the uninterrupted run exactly."""
+        self.arrs = None
+        self.n = 0
+        self.cap = 0
+        cap = max(cap if cap is not None else n, n)
+        if cap == 0:
+            return
+        self._grow(cap)
+        for name in NodeState._fields:
+            self.arrs[name][:n] = arrs[name]
+        self.n = n
 
     def append(self, node: NodeState) -> int:
         if self.n == self.cap:
@@ -123,6 +135,14 @@ class _LeafIndex:
         self._ends[self.n:self.n + m] = ts1s
         self.n += m
 
+    def load(self, starts: np.ndarray, ends: np.ndarray) -> None:
+        """Overwrite with snapshot keys (fresh doubling storage)."""
+        self.n = 0
+        self._starts = np.zeros((16,), np.uint64)
+        self._ends = np.zeros((16,), np.uint64)
+        self.extend(np.asarray(starts, np.uint64),
+                    np.asarray(ends, np.uint64))
+
     @property
     def starts(self) -> np.ndarray:
         return self._starts[: self.n]
@@ -188,6 +208,14 @@ class _OverflowStore:
     def total_entries(self) -> int:
         return sum(self._len.values())
 
+    def load(self, records: dict) -> None:
+        """Overwrite with snapshot records {(level, node): columns};
+        column capacities re-amortize from the trimmed lengths."""
+        self._cols.clear()
+        self._len.clear()
+        for (level, node), cols in records.items():
+            self.add(level, node, **cols)
+
 
 class HiggsSketch(LegacyQueryMixin):
     """The full HIGGS structure behind the ``GraphSummary`` protocol.
@@ -199,6 +227,7 @@ class HiggsSketch(LegacyQueryMixin):
     """
 
     name = "HIGGS"
+    snapshot_kind = "higgs"
 
     def __init__(self, params: HiggsParams = HiggsParams()):
         self.params = params
@@ -254,6 +283,78 @@ class HiggsSketch(LegacyQueryMixin):
         """Execute a typed query batch: one boundary search per distinct
         time range, one device probe per (level, range class)."""
         return self.planner.execute(queries)
+
+    # ------------------------------------------------------------------
+    # persistence (GraphSummary snapshot surface)
+    # ------------------------------------------------------------------
+
+    def state_dict(self):
+        """Full sketch state as flat host arrays + JSON-able metadata.
+
+        Everything the stream ever contributed is captured: every level
+        pool (trimmed to its node count, capacities recorded), the leaf
+        interval index, the overflow-store columns, the *pending* raw-item
+        buffer (a mid-stream snapshot must not lose items that have not
+        formed a leaf yet), plus ``structure_version`` and the params.
+        """
+        arrays: dict[str, np.ndarray] = {
+            "leaf_starts": self._leaves.starts,
+            "leaf_ends": self._leaves.ends,
+            "buf": (np.concatenate(self._buf, axis=1) if self._buf
+                    else np.zeros((4, 0), np.uint32)),
+        }
+        pools_meta = []
+        for lvl, pool in enumerate(self.pools, start=1):
+            pools_meta.append({"n": int(pool.n), "cap": int(pool.cap),
+                               "d": int(pool.d), "b": int(pool.b)})
+            src = pool.arrs if pool.arrs is not None else \
+                cmatrix.empty_node_arrays(0, pool.d, pool.b)
+            for name in NodeState._fields:
+                arrays[f"pool{lvl}/{name}"] = src[name][:pool.n]
+        ob_keys = []
+        for (level, node), cols in self.ob.data.items():
+            ob_keys.append([int(level), int(node)])
+            for field, col in cols.items():
+                arrays[f"ob/{level}.{node}/{field}"] = col
+        meta = {
+            "config": dataclasses.asdict(self.params),
+            "n_items": int(self.n_items),
+            "buf_len": int(self._buf_len),
+            "version": int(self._version),
+            "probe_counter": int(self.probe_counter),
+            "pools": pools_meta,
+            "ob_keys": ob_keys,
+        }
+        return arrays, meta
+
+    def load_state(self, arrays: dict, meta: dict) -> None:
+        """Exact inverse of :meth:`state_dict`: reconfigure from the saved
+        params and overwrite all state, leaving a sketch bit-identical to
+        the saved one (pools, OB, intervals, pending buffer and therefore
+        all query answers and all future-insert behavior).  The planner is
+        rebuilt and its plan cache re-seeded from the restored
+        ``structure_version`` — stale plans must never survive a restore.
+        """
+        self.__init__(HiggsParams(**meta["config"]))
+        for lvl, pm in enumerate(meta["pools"], start=1):
+            if lvl > len(self.pools):
+                self.pools.append(_LevelPool(int(pm["d"]), int(pm["b"])))
+            self.pools[lvl - 1].load(
+                {name: arrays[f"pool{lvl}/{name}"]
+                 for name in NodeState._fields},
+                int(pm["n"]), cap=int(pm["cap"]))
+        self._leaves.load(arrays["leaf_starts"], arrays["leaf_ends"])
+        self.ob.load({(int(lvl), int(node)):
+                      {f: arrays[f"ob/{lvl}.{node}/{f}"]
+                       for f in _OverflowStore.FIELDS}
+                      for lvl, node in meta["ob_keys"]})
+        buf = np.ascontiguousarray(arrays["buf"], np.uint32)
+        self._buf = [buf] if buf.shape[1] else []
+        self._buf_len = int(meta["buf_len"])
+        self.n_items = int(meta["n_items"])
+        self._version = int(meta["version"])
+        self.planner.invalidate()
+        self.probe_counter = int(meta["probe_counter"])
 
     # ------------------------------------------------------------------
     # insertion

@@ -21,6 +21,7 @@ class ExactOracle(PointwiseQueryMixin):
     """
 
     name = "Exact"
+    snapshot_kind = "oracle"
     temporal = True
 
     def __init__(self):
@@ -72,3 +73,46 @@ class ExactOracle(PointwiseQueryMixin):
     def total_weight(self, ts: int, te: int) -> float:
         return float(sum(self._range_sum(v, ts, te)
                          for v in self._edges.values()))
+
+    # -- persistence -----------------------------------------------------
+    @staticmethod
+    def _table_arrays(table: dict, two_part_keys: bool) -> dict:
+        """One (t, w) row per stored item, keys repeated per row; global
+        row order is table-iteration order, so each key's list order (and
+        therefore every float summation order) survives the round trip."""
+        ka, kb, ts, ws = [], [], [], []
+        for key, items in table.items():
+            a, b = key if two_part_keys else (key, 0)
+            for t, w in items:
+                ka.append(a)
+                kb.append(b)
+                ts.append(t)
+                ws.append(w)
+        return {"ka": np.asarray(ka, np.uint64),
+                "kb": np.asarray(kb, np.uint64),
+                "t": np.asarray(ts, np.uint64),
+                "w": np.asarray(ws, np.float64)}
+
+    @staticmethod
+    def _load_table(table: dict, arrs: dict, two_part_keys: bool) -> None:
+        for a, b, t, w in zip(arrs["ka"].tolist(), arrs["kb"].tolist(),
+                              arrs["t"].tolist(), arrs["w"].tolist()):
+            table[(a, b) if two_part_keys else a].append((t, w))
+
+    def state_dict(self):
+        arrays = {}
+        for name, table, pair in (("edges", self._edges, True),
+                                  ("out", self._out, False),
+                                  ("in", self._in, False)):
+            for k, a in self._table_arrays(table, pair).items():
+                arrays[f"{name}/{k}"] = a
+        return arrays, {"config": {}, "n_items": int(self.n_items)}
+
+    def load_state(self, arrays: dict, meta: dict) -> None:
+        self.__init__()
+        for name, table, pair in (("edges", self._edges, True),
+                                  ("out", self._out, False),
+                                  ("in", self._in, False)):
+            self._load_table(table, {k: arrays[f"{name}/{k}"]
+                                     for k in ("ka", "kb", "t", "w")}, pair)
+        self.n_items = int(meta["n_items"])

@@ -15,7 +15,11 @@ from __future__ import annotations
 import signal
 import time
 from collections import defaultdict, deque
-from typing import Callable, Optional
+from typing import TYPE_CHECKING, Callable, Optional
+
+if TYPE_CHECKING:
+    from repro.api import GraphSummary
+    from repro.stream.pipeline import StreamPipeline
 
 
 class PreemptionGuard:
@@ -50,6 +54,33 @@ class PreemptionGuard:
     def restore(self) -> None:
         for sig, prev in self._prev.items():
             signal.signal(sig, prev)
+
+
+def run_with_preemption(pipeline: "StreamPipeline", sketch: "GraphSummary",
+                        ckpt_dir: str, every: int = 1,
+                        keep: Optional[int] = None,
+                        guard: Optional[PreemptionGuard] = None,
+                        **kw) -> "GraphSummary":
+    """Wire a :class:`PreemptionGuard` into crash-consistent ingestion.
+
+    SIGTERM from the scheduler flips the guard; ``run_resumable`` then
+    takes one final atomic sketch+cursor snapshot and returns cleanly.
+    Re-invoking after the preemption (same ``ckpt_dir``) resumes from
+    that snapshot and produces a sketch bit-identical to an
+    uninterrupted run.  Pass an existing ``guard`` to drive the stop
+    programmatically (tests / RPC via ``guard.request_stop``); by
+    default one is installed on SIGTERM and restored afterwards.
+    """
+    own = guard is None
+    if own:
+        guard = PreemptionGuard()
+    try:
+        return pipeline.run_resumable(
+            sketch, ckpt_dir, every=every, keep=keep,
+            should_stop=lambda: guard.should_stop, **kw)
+    finally:
+        if own:
+            guard.restore()
 
 
 class StragglerMonitor:

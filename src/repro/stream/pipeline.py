@@ -51,10 +51,7 @@ class StreamPipeline:
         The final sketch is identical either way (leaf boundaries depend
         only on the item sequence); alignment just batches better.
         """
-        batch = self.batch
-        chunk = getattr(getattr(sketch, "params", None), "chunk_size", 0)
-        if align and chunk:
-            batch = max(chunk, self.batch // chunk * chunk)
+        batch = self._aligned_batch(sketch, align)
         for b in self._iter_batches(batch):
             sketch.insert(*b)
             if progress:
@@ -74,20 +71,128 @@ class StreamPipeline:
 
     # -- fault tolerance ------------------------------------------------
     def save_cursor(self, path: str) -> None:
-        with open(path, "w") as fh:
+        """Atomically persist {cursor, batch}: write a sibling tmp file
+        and ``os.replace`` it in, so a preemption mid-dump can never leave
+        a truncated cursor file (which would defeat the checkpoint)."""
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as fh:
             json.dump({"cursor": self.cursor, "batch": self.batch}, fh)
+        os.replace(tmp, path)
 
     def restore_cursor(self, path: str) -> None:
         """Restore both cursor AND batch size.  The batch governs where
         future cursors can land; silently keeping a different local
         ``batch`` made resumed runs checkpoint at positions the original
-        schedule could never produce."""
-        if os.path.exists(path):
+        schedule could never produce.
+
+        A missing file is a normal first run (no-op); a corrupt or
+        incomplete one raises — silently restarting from cursor 0 would
+        double-ingest the whole prefix into the sketch.
+        """
+        if not os.path.exists(path):
+            return
+        try:
             with open(path) as fh:
                 meta = json.load(fh)
-            self.cursor = int(meta["cursor"])
-            if "batch" in meta:
-                self.batch = int(meta["batch"])
+            cursor = int(meta["cursor"])
+            batch = int(meta.get("batch", self.batch))
+        except (json.JSONDecodeError, KeyError, TypeError, ValueError) as e:
+            raise ValueError(
+                f"corrupt cursor file {path!r}: {e}; refusing to reset "
+                f"silently — delete it to restart from scratch") from e
+        self.cursor = cursor
+        self.batch = batch
+
+    def _aligned_batch(self, sketch: "GraphSummary", align: bool) -> int:
+        chunk = getattr(getattr(sketch, "params", None), "chunk_size", 0)
+        if align and chunk:
+            return max(chunk, self.batch // chunk * chunk)
+        return self.batch
+
+    def snapshot(self, sketch: "GraphSummary", ckpt_dir: str) -> str:
+        """Snapshot sketch + cursor as ONE atomic unit.
+
+        Both live in a single manifest (one tmp-dir rename), so a crash
+        can never persist a cursor that disagrees with the sketch state —
+        the failure mode that made a resumed run silently replay or skip
+        stream items.  The step is the cursor itself (monotone and unique
+        per schedule position).
+        """
+        from repro.checkpoint.store import save_checkpoint
+        arrays, meta = sketch.state_dict()
+        metadata = {
+            "summary": getattr(sketch, "snapshot_kind", sketch.name),
+            "state": meta,
+            "cursor": {"cursor": int(self.cursor), "batch": int(self.batch)},
+        }
+        return save_checkpoint(ckpt_dir, int(self.cursor), arrays, metadata)
+
+    def restore_snapshot(self, sketch: "GraphSummary", ckpt_dir: str,
+                         step: int | None = None) -> int:
+        """Rebuild ``sketch`` and this pipeline's cursor from the latest
+        (or a specific) snapshot; returns the restored step."""
+        from repro.checkpoint.store import load_snapshot
+        kind = getattr(sketch, "snapshot_kind", sketch.name)
+        arrays, metadata, step = load_snapshot(ckpt_dir, step,
+                                               expect_kind=kind)
+        if "cursor" not in metadata:
+            raise ValueError(f"snapshot step {step} under {ckpt_dir!r} has "
+                             f"no cursor — not a pipeline snapshot")
+        sketch.load_state(arrays, metadata["state"])
+        cur = metadata["cursor"]
+        self.cursor = int(cur["cursor"])
+        self.batch = int(cur["batch"])
+        return step
+
+    def run_resumable(self, sketch: "GraphSummary", ckpt_dir: str,
+                      every: int = 1,
+                      progress: Callable[[int], None] | None = None,
+                      flush: bool = True, align: bool = True,
+                      should_stop: Callable[[], bool] | None = None,
+                      keep: int | None = None,
+                      resume: bool = True) -> "GraphSummary":
+        """Crash-consistent :meth:`feed`: snapshot sketch + cursor every
+        ``every`` batches, resuming from the newest snapshot if one
+        exists.
+
+        Because each snapshot captures the sketch's *entire* state —
+        including the pending not-yet-a-leaf buffer — a killed run
+        restored from its last snapshot continues into a sketch
+        bit-identical to one fed without interruption.  ``should_stop``
+        (e.g. a :class:`~repro.runtime.fault.PreemptionGuard`) is checked
+        after every batch; on stop a final snapshot is taken before
+        returning, un-flushed, so the next invocation resumes mid-stream.
+        ``keep`` bounds retained snapshots via
+        :func:`~repro.checkpoint.store.gc_checkpoints`.
+        """
+        from repro.checkpoint.store import gc_checkpoints, latest_step
+        if every < 1:
+            raise ValueError("run_resumable needs every >= 1")
+        if resume and latest_step(ckpt_dir) is not None:
+            self.restore_snapshot(sketch, ckpt_dir)
+        batch = self._aligned_batch(sketch, align)
+        done = 0
+        for b in self._iter_batches(batch):
+            sketch.insert(*b)
+            done += 1
+            if progress:
+                progress(self.cursor)
+            if done % every == 0:
+                self.snapshot(sketch, ckpt_dir)
+                if keep:
+                    gc_checkpoints(ckpt_dir, keep=keep)
+            if should_stop and should_stop():
+                if done % every:
+                    self.snapshot(sketch, ckpt_dir)
+                return sketch
+        if flush:
+            sketch.flush()
+        # final snapshot holds the flushed sketch at cursor == len(self),
+        # so a restart of a completed run restores and immediately returns
+        self.snapshot(sketch, ckpt_dir)
+        if keep:
+            gc_checkpoints(ckpt_dir, keep=keep)
+        return sketch
 
 
 def token_transition_stream(tokens: np.ndarray, step: int):

@@ -1,0 +1,371 @@
+"""Crash-consistent sketch persistence (PR 3): save/restore round trips
+for HIGGS and every baseline, atomic sketch+cursor snapshots with
+kill-and-resume bit-identity, checkpoint-store hygiene (stale tmp sweep,
+retention GC), atomic cursor files, and the planner's LRU eviction."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import (EdgeQuery, PathQuery, SubgraphQuery, VertexQuery,
+                       make_summary, restore_summary)
+from repro.checkpoint import store as ckpt
+from repro.core.cmatrix import NodeState
+from repro.core.higgs import HiggsSketch
+from repro.core.params import HiggsParams
+from repro.runtime.fault import PreemptionGuard, run_with_preemption
+from repro.stream.pipeline import StreamPipeline
+
+PARAMS_SMALL = dict(d1=4, F1=14, b=2, r=2)
+
+SUMMARIES = [
+    ("higgs", PARAMS_SMALL),
+    ("tcm", dict(d=64)),
+    ("horae", dict(l_bits=10, d=32)),
+    ("horae-cpt", dict(l_bits=10, d=32)),
+    ("pgss", dict(l_bits=10, m=1 << 12)),
+    ("auxotime", dict(l_bits=10, d=16)),
+    ("oracle", {}),
+]
+
+
+def make_stream(n, nv, t_max, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, nv, n).astype(np.uint32)
+    dst = rng.integers(0, nv, n).astype(np.uint32)
+    w = rng.integers(1, 10, n).astype(np.float32)
+    t = np.sort(rng.integers(0, t_max, n).astype(np.uint32))
+    return src, dst, w, t
+
+
+def query_batch(stream, t_max):
+    src, dst = stream[0], stream[1]
+    return [
+        EdgeQuery(src[:50], dst[:50], t_max // 4, 3 * t_max // 4),
+        EdgeQuery(src[:10], dst[:10], 0, t_max),
+        VertexQuery(src[:20], 0, t_max, "out"),
+        VertexQuery(dst[:20], t_max // 8, t_max, "in"),
+        PathQuery([int(src[0]), int(dst[0]), int(dst[1])], 0, t_max),
+        SubgraphQuery([(int(src[2]), int(dst[2])),
+                       (int(src[3]), int(dst[3]))], 1, t_max - 1),
+    ]
+
+
+def assert_same_answers(a, b, stream, t_max, tag=""):
+    qa = a.query(query_batch(stream, t_max)).values
+    qb = b.query(query_batch(stream, t_max)).values
+    for i, (x, y) in enumerate(zip(qa, qb)):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), (tag, i)
+    assert a.space_bytes() == b.space_bytes(), tag
+
+
+def assert_sketch_identical(a: HiggsSketch, b: HiggsSketch, tag=""):
+    """Bit-identical HIGGS state: leaf keys, every pool level (contents
+    AND capacities), overflow store, pending buffer, counters."""
+    np.testing.assert_array_equal(a.leaf_starts, b.leaf_starts, err_msg=tag)
+    np.testing.assert_array_equal(a.leaf_ends, b.leaf_ends, err_msg=tag)
+    assert len(a.pools) == len(b.pools), tag
+    for lvl, (pa, pb) in enumerate(zip(a.pools, b.pools)):
+        assert pa.n == pb.n and pa.cap == pb.cap, (tag, lvl)
+        for name in NodeState._fields:
+            assert np.array_equal(pa.arrs[name][:pa.n],
+                                  pb.arrs[name][:pb.n]), (tag, lvl, name)
+    da, db = a.ob.data, b.ob.data
+    assert set(da) == set(db), tag
+    for key in da:
+        for f in da[key]:
+            assert np.array_equal(da[key][f], db[key][f]), (tag, key, f)
+    assert a._buf_len == b._buf_len, tag
+    if a._buf or b._buf:
+        ba = np.concatenate(a._buf, axis=1) if a._buf else None
+        bb = np.concatenate(b._buf, axis=1) if b._buf else None
+        assert ba is not None and bb is not None, tag
+        assert np.array_equal(ba, bb), tag
+    assert a.n_items == b.n_items, tag
+    assert a.structure_version == b.structure_version, tag
+
+
+class TestRoundTrip:
+    @pytest.mark.parametrize("name,kw", SUMMARIES,
+                             ids=[n for n, _ in SUMMARIES])
+    def test_save_restore_same_answers(self, tmp_path, name, kw):
+        t_max = 900
+        stream = make_stream(2500, 48, t_max, seed=3)
+        sk = make_summary(name, **kw)
+        StreamPipeline(*stream, batch=512).feed(sk)
+        sk.save(str(tmp_path), 7)
+        # class-free reconstruction from the manifest alone
+        got = restore_summary(str(tmp_path))
+        assert_same_answers(sk, got, stream, t_max, tag=name)
+        # restore into an existing instance of the right kind
+        inst = make_summary(name, **kw)
+        inst.restore(str(tmp_path), 7)
+        assert_same_answers(sk, inst, stream, t_max, tag=name)
+
+    def test_restore_wrong_kind_raises(self, tmp_path):
+        sk = make_summary("tcm", d=32)
+        sk.insert([1], [2], [3.0], [4])
+        sk.save(str(tmp_path), 0)
+        with pytest.raises(ValueError, match="tcm"):
+            make_summary("pgss", l_bits=4, m=64).restore(str(tmp_path), 0)
+
+    def test_higgs_roundtrip_with_ob_and_pending_buffer(self, tmp_path):
+        # heavy key skew + tiny matrices => populated overflow store;
+        # no flush and an unaligned batch => non-empty pending buffer
+        t_max = 50
+        stream = make_stream(900, 6, t_max, seed=5)
+        sk = make_summary("higgs", **PARAMS_SMALL)
+        StreamPipeline(*stream, batch=130).feed(sk, flush=False,
+                                                align=False)
+        assert sk.ob.total_entries() > 0, "test stream must populate OB"
+        assert sk._buf_len > 0, "test stream must leave a pending buffer"
+        sk.save(str(tmp_path), 11)
+        got = restore_summary(str(tmp_path), 11)
+        assert_sketch_identical(sk, got)
+        # the pending buffer must survive: flushing both yields the same
+        # final tree and the same answers
+        sk.flush()
+        got.flush()
+        assert_sketch_identical(sk, got)
+        assert_same_answers(sk, got, stream, t_max)
+
+    def test_property_roundtrip(self):
+        """Hypothesis: any partially-fed HIGGS (arbitrary flush point)
+        and any baseline round-trip to identical answers and space."""
+        pytest.importorskip(
+            "hypothesis",
+            reason="optional dev dependency; install with "
+                   "`pip install .[test]`")
+        from hypothesis import given, settings, strategies as st
+
+        @st.composite
+        def cases(draw):
+            n = draw(st.integers(30, 400))
+            seed = draw(st.integers(0, 2 ** 31 - 1))
+            t_max = draw(st.integers(1, 60))        # small => long runs
+            batch = draw(st.integers(7, 200))
+            flush = draw(st.booleans())
+            which = draw(st.sampled_from(["higgs", "horae", "auxotime",
+                                          "oracle"]))
+            return n, seed, t_max, batch, flush, which
+
+        @given(cases())
+        @settings(max_examples=12, deadline=None)
+        def check(case):
+            n, seed, t_max, batch, flush, which = case
+            stream = make_stream(n, 16, t_max, seed)
+            kw = dict(SUMMARIES)[which]
+            sk = make_summary(which, **kw)
+            StreamPipeline(*stream, batch=batch).feed(sk, flush=flush,
+                                                      align=False)
+            import tempfile
+            with tempfile.TemporaryDirectory() as d:
+                sk.save(d, 0)
+                got = restore_summary(d, 0)
+            if which == "higgs":
+                assert_sketch_identical(sk, got)
+            sk.flush()
+            got.flush()
+            assert_same_answers(sk, got, stream, t_max, tag=which)
+
+        check()
+
+
+class TestKillResume:
+    """Acceptance: a run snapshotted every N batches, killed, and
+    restored produces a sketch bit-identical to an uninterrupted run."""
+
+    @pytest.mark.parametrize("kill_at,every,align",
+                             [(3, 2, True), (7, 3, False), (1, 1, False)])
+    def test_kill_and_resume_bit_identical(self, tmp_path, kill_at, every,
+                                           align):
+        t_max = 1200
+        stream = make_stream(5000, 64, t_max, seed=9)
+        p = HiggsParams(**PARAMS_SMALL)
+        ref = HiggsSketch(p)
+        StreamPipeline(*stream, batch=256).feed(ref)
+
+        d = str(tmp_path)
+        pipe = StreamPipeline(*stream, batch=256)
+        sk = HiggsSketch(p)
+        n_calls = [0]
+
+        def stop():
+            n_calls[0] += 1
+            return n_calls[0] >= kill_at
+
+        pipe.run_resumable(sk, d, every=every, align=align,
+                           should_stop=stop)
+        assert pipe.cursor < len(pipe), "must die mid-stream"
+
+        pipe2 = StreamPipeline(*stream, batch=256)
+        sk2 = HiggsSketch(p)
+        pipe2.run_resumable(sk2, d, every=every, align=align)
+        assert pipe2.cursor == len(pipe2)
+        assert_sketch_identical(ref, sk2)
+        assert_same_answers(ref, sk2, stream, t_max)
+
+    def test_snapshot_is_single_manifest(self, tmp_path):
+        """Sketch and cursor live in ONE manifest — they can never
+        disagree after a crash."""
+        stream = make_stream(600, 16, 200, seed=1)
+        pipe = StreamPipeline(*stream, batch=100)
+        sk = HiggsSketch(HiggsParams(**PARAMS_SMALL))
+        pipe.run_resumable(sk, str(tmp_path), every=1)
+        step = ckpt.latest_step(str(tmp_path))
+        manifest = ckpt.read_manifest(str(tmp_path), step)
+        meta = manifest["metadata"]
+        assert meta["summary"] == "higgs"
+        assert meta["cursor"]["cursor"] == step == len(pipe)
+        assert "state" in meta and "config" in meta["state"]
+
+    def test_restored_planner_cache_is_invalidated(self, tmp_path):
+        """A sketch that already served queries must not reuse stale
+        plans after restore — same version number, different tree."""
+        t_max = 300
+        s1 = make_stream(1200, 32, t_max, seed=2)
+        sk = HiggsSketch(HiggsParams(**PARAMS_SMALL))
+        StreamPipeline(*s1, batch=256).feed(sk)
+        sk.save(str(tmp_path), 0)
+        saved_answers = sk.query(query_batch(s1, t_max)).values
+
+        other = HiggsSketch(HiggsParams(**PARAMS_SMALL))
+        StreamPipeline(*make_stream(900, 32, t_max, seed=8),
+                       batch=256).feed(other)
+        other.query(query_batch(s1, t_max))        # warm a now-stale cache
+        assert other.planner._plan_cache
+        other.restore(str(tmp_path), 0)
+        assert not other.planner._plan_cache
+        got = other.query(query_batch(s1, t_max))
+        for x, y in zip(saved_answers, got.values):
+            assert np.array_equal(np.asarray(x), np.asarray(y))
+
+    def test_run_with_preemption(self, tmp_path):
+        stream = make_stream(2000, 32, 500, seed=4)
+        p = HiggsParams(**PARAMS_SMALL)
+        ref = HiggsSketch(p)
+        StreamPipeline(*stream, batch=200).feed(ref)
+
+        guard = PreemptionGuard(install=False)
+        pipe = StreamPipeline(*stream, batch=200)
+        sk = HiggsSketch(p)
+        orig = pipe.snapshot
+
+        def snap_then_sigterm(sketch, d):
+            out = orig(sketch, d)
+            if pipe.cursor >= 600:
+                guard.request_stop()               # "SIGTERM" mid-run
+            return out
+
+        pipe.snapshot = snap_then_sigterm
+        run_with_preemption(pipe, sk, str(tmp_path), every=1, guard=guard)
+        assert pipe.cursor < len(pipe)
+
+        pipe2 = StreamPipeline(*stream, batch=200)
+        sk2 = HiggsSketch(p)
+        run_with_preemption(pipe2, sk2, str(tmp_path), every=1,
+                            guard=PreemptionGuard(install=False))
+        assert_sketch_identical(ref, sk2)
+
+    def test_resume_with_retention(self, tmp_path):
+        stream = make_stream(1500, 32, 400, seed=6)
+        pipe = StreamPipeline(*stream, batch=100)
+        sk = HiggsSketch(HiggsParams(**PARAMS_SMALL))
+        pipe.run_resumable(sk, str(tmp_path), every=1, keep=2)
+        steps = sorted(int(x.split("_")[1]) for x in os.listdir(tmp_path)
+                       if x.startswith("step_"))
+        assert len(steps) == 2 and steps[-1] == len(pipe)
+
+
+class TestCursorAtomicity:
+    def _pipe(self, n=90, batch=30):
+        arrs = [np.arange(n, dtype=np.uint32)] * 2 + \
+            [np.ones(n, np.float32), np.arange(n, dtype=np.uint32)]
+        return StreamPipeline(*arrs, batch=batch)
+
+    def test_save_cursor_leaves_no_tmp(self, tmp_path):
+        pipe = self._pipe()
+        next(iter(pipe))
+        path = str(tmp_path / "cursor.json")
+        pipe.save_cursor(path)
+        assert os.listdir(tmp_path) == ["cursor.json"]
+        pipe2 = self._pipe(batch=7)
+        pipe2.restore_cursor(path)
+        assert pipe2.cursor == 30 and pipe2.batch == 30
+
+    def test_restore_cursor_raises_on_corrupt(self, tmp_path):
+        path = str(tmp_path / "cursor.json")
+        with open(path, "w") as fh:
+            fh.write('{"cursor": 3')               # truncated mid-dump
+        pipe = self._pipe()
+        with pytest.raises(ValueError, match="corrupt cursor"):
+            pipe.restore_cursor(path)
+        with open(path, "w") as fh:
+            json.dump({"batch": 30}, fh)           # cursor key missing
+        with pytest.raises(ValueError, match="corrupt cursor"):
+            pipe.restore_cursor(path)
+        assert pipe.cursor == 0                    # state untouched
+
+    def test_restore_cursor_missing_is_first_run(self, tmp_path):
+        pipe = self._pipe()
+        pipe.restore_cursor(str(tmp_path / "nope.json"))
+        assert pipe.cursor == 0 and pipe.batch == 30
+
+
+class TestStoreHygiene:
+    def test_stale_tmp_swept_on_next_save(self, tmp_path):
+        d = str(tmp_path)
+        stale = tmp_path / ".tmp_step_3"
+        stale.mkdir()
+        (stale / "arrays.npz").write_bytes(b"garbage")
+        assert ckpt.latest_step(d) is None         # invisible to latest
+        ckpt.save_checkpoint(d, 5, {"x": np.arange(3)})
+        assert not stale.exists()
+        assert ckpt.latest_step(d) == 5
+
+    def test_gc_checkpoints_retention(self, tmp_path):
+        d = str(tmp_path)
+        for s in (1, 2, 5, 9):
+            ckpt.save_checkpoint(d, s, {"x": np.full(2, s)})
+        (tmp_path / ".tmp_step_9").mkdir()
+        removed = ckpt.gc_checkpoints(d, keep=2)
+        assert removed == [1, 2]
+        assert sorted(os.listdir(d)) == ["step_5", "step_9"]
+        arrays, _ = ckpt.restore_arrays(d, 9)
+        assert np.array_equal(arrays["x"], np.full(2, 9))
+        with pytest.raises(ValueError):
+            ckpt.gc_checkpoints(d, keep=0)
+
+    def test_restore_arrays_shape_free(self, tmp_path):
+        d = str(tmp_path)
+        tree = {"a": np.arange(7, dtype=np.uint64),
+                "b/c": np.zeros((0, 4), np.float32)}
+        ckpt.save_checkpoint(d, 1, tree, metadata={"k": "v"})
+        arrays, meta = ckpt.restore_arrays(d, 1)
+        assert meta == {"k": "v"}
+        assert arrays["a"].dtype == np.uint64
+        assert arrays["b/c"].shape == (0, 4)
+        assert arrays["b/c"].dtype == np.float32
+
+
+class TestPlannerLRU:
+    def test_hot_plan_survives_eviction(self):
+        stream = make_stream(1500, 32, 800, seed=7)
+        sk = HiggsSketch(HiggsParams(**PARAMS_SMALL))
+        StreamPipeline(*stream, batch=512).feed(sk)
+        planner = sk.planner
+        planner.MAX_CACHED_PLANS = 4               # instance shadow
+        ranges = [(0, 100), (0, 200), (0, 300), (0, 400)]
+        for ts, te in ranges:
+            sk.query([EdgeQuery(stream[0][:4], stream[1][:4], ts, te)])
+        # touch the oldest-inserted plan -> it becomes most recent
+        hot = sk.query([EdgeQuery(stream[0][:4], stream[1][:4], 0, 100)])
+        assert hot.stats.plan_cache_hits == 1
+        # a new range evicts (0, 200) — the true LRU — not the hot plan
+        sk.query([EdgeQuery(stream[0][:4], stream[1][:4], 0, 500)])
+        assert (0, 100) in planner._plan_cache
+        assert (0, 200) not in planner._plan_cache
+        again = sk.query([EdgeQuery(stream[0][:4], stream[1][:4], 0, 100)])
+        assert again.stats.plan_cache_hits == 1
+        assert again.stats.boundary_searches == 0
