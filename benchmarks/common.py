@@ -23,6 +23,7 @@ ROWS: list[str] = []
 # registry kwargs for the benchmark-default configurations
 DEFAULT_KW: dict[str, dict] = {
     "HIGGS": dict(d1=16, F1=19),
+    "HIGGS-sharded": dict(shards=4, d1=16, F1=19),
     "Horae": dict(d=96, b=4),
     "Horae-cpt": dict(d=96, b=4),
     "PGSS": dict(m=1 << 17),
@@ -55,8 +56,8 @@ def build_all(stream, l_bits: int, include=("HIGGS", "Horae", "Horae-cpt",
     out: dict[str, tuple[GraphSummary, float]] = {}
     for name in include:
         kw = dict(DEFAULT_KW.get(name, {}))
-        if name == "HIGGS":
-            if higgs_params is not None:
+        if name.startswith("HIGGS"):               # incl. HIGGS-sharded
+            if higgs_params is not None and name == "HIGGS":
                 kw = dict(params=higgs_params)
         else:
             kw["l_bits"] = l_bits

@@ -1,0 +1,85 @@
+"""CI perf-regression gate: compare a measured ``BENCH_*.json`` against
+the committed baseline.
+
+Usage::
+
+    python -m benchmarks.compare_bench BENCH_smoke.json \
+        benchmarks/baselines/BENCH_baseline.json --tolerance 0.25
+
+Gating semantics per metric ``kind`` (set by ``benchmarks.throughput``):
+
+* ``"floor"`` — wall-clock *ratios* (speedups).  Regression iff
+  ``measured < baseline * (1 - tolerance)``; running *faster* than the
+  baseline is never a failure, so the committed values can stay
+  conservative while hosts vary.  Absolute wall-clock numbers are never
+  gated — only machine-relative ratios are stable enough across CI
+  runners.
+* ``"exact"`` — deterministic structure counters (leaf counts, space
+  accounting).  Any drift means the ingestion/partitioning logic
+  changed behavior and must be acknowledged by regenerating the
+  baseline in the same PR.
+* ``"info"`` — recorded for trend analysis (the uploaded artifact),
+  never gated.
+
+Every baseline metric must exist in the measured file (a silently
+dropped metric is itself a regression); measured-only metrics are
+ignored so new metrics can land before their baseline does.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+
+def compare(measured: dict, baseline: dict, tolerance: float) -> list[str]:
+    """Returns a list of human-readable failures (empty = gate passes)."""
+    failures: list[str] = []
+    got = measured.get("metrics", {})
+    for name, spec in sorted(baseline.get("metrics", {}).items()):
+        kind = spec.get("kind", "info")
+        base = float(spec["value"])
+        if name not in got:
+            failures.append(f"{name}: missing from measured results")
+            continue
+        val = float(got[name]["value"])
+        if kind == "floor":
+            floor = base * (1.0 - tolerance)
+            if val < floor:
+                failures.append(
+                    f"{name}: {val:.3f} below floor {floor:.3f} "
+                    f"(baseline {base:.3f}, tolerance {tolerance:.0%})")
+        elif kind == "exact":
+            if not math.isclose(val, base, rel_tol=1e-9, abs_tol=1e-6):
+                failures.append(
+                    f"{name}: {val!r} != baseline {base!r} (exact metric; "
+                    f"regenerate the baseline if the change is intended)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("measured")
+    ap.add_argument("baseline")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative slack for 'floor' metrics "
+                         "(default 0.25)")
+    args = ap.parse_args(argv)
+    with open(args.measured) as fh:
+        measured = json.load(fh)
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    failures = compare(measured, baseline, args.tolerance)
+    n = len(baseline.get("metrics", {}))
+    if failures:
+        print(f"perf gate FAILED ({len(failures)}/{n} metrics):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"perf gate OK ({n} baseline metrics within tolerance)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

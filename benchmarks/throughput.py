@@ -3,23 +3,56 @@ deletion throughput (deletion = negative-weight insertion).
 
 Also reports the HIGGS serial-vs-batched ingestion comparison (PR 2):
 the legacy one-launch-per-leaf reference path against the batched
-multi-leaf engine, fed in leaf-aligned batches.  Both variants are
-warmed with one full pass first so the numbers are steady-state
-ingestion, not XLA compile time.
+multi-leaf engine, fed in leaf-aligned batches; and the sharded
+scale-out comparison (PR 4): ``ShardedHiggs`` partition-parallel
+ingestion at ``--shards S`` against the S=1 degenerate case, on the
+balanced many-tenant stream (source-partition parallelism measures the
+engine, not the workload's skew — see ``balanced_stream``).  All
+variants are warmed with one pass first so the numbers are
+steady-state ingestion, not XLA compile or worker-fork time.
 
-``--smoke`` runs a scaled-down version of only that comparison and
-fails loudly if the batched engine loses its edge or diverges from the
-reference — the CI regression gate for the ingestion path.
+``--smoke`` runs scaled-down versions of both comparisons and fails
+loudly on regression — the CI gate for the ingestion path.  With
+``--json PATH`` it writes the machine-readable result file CI compares
+against ``benchmarks/baselines/BENCH_baseline.json`` (see
+``benchmarks.compare_bench``) and uploads as a build artifact.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import numpy as np
 
 from benchmarks import common
-from repro.stream.generator import lkml_like_stream
+from repro.stream.generator import balanced_stream, lkml_like_stream
+
+# machine-readable results accumulated by the smoke gates; each entry is
+# {"value": float, "kind": "floor" | "exact" | "info"} — see
+# benchmarks/compare_bench.py for the gating semantics per kind
+METRICS: dict[str, dict] = {}
+
+
+def record(name: str, value: float, kind: str = "info") -> None:
+    METRICS[name] = {"value": float(value), "kind": kind}
+
+
+def write_json(path: str) -> None:
+    import platform
+    payload = {
+        "schema": 1,
+        "host": {
+            "cpu_count": os.cpu_count(),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+        },
+        "metrics": METRICS,
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+    print(f"wrote {path} ({len(METRICS)} metrics)")
 
 
 def _feed(sk, stream, batch: int) -> float:
@@ -41,8 +74,10 @@ def serial_vs_batched(stream, repeat: int = 1):
 
     n = len(stream[0])
     params = {
+        # both flags explicit: the comparison must not drift with the
+        # HIGGS_BATCHED_INGEST env default the CI matrix flips
         "serial": HiggsParams(d1=16, F1=19, batched_ingest=False),
-        "batched": HiggsParams(d1=16, F1=19),
+        "batched": HiggsParams(d1=16, F1=19, batched_ingest=True),
     }
     secs, sketches = {}, {}
     for tag, p in params.items():
@@ -63,13 +98,61 @@ def serial_vs_batched(stream, repeat: int = 1):
     return secs["serial"], secs["batched"], sketches
 
 
-def run(n_edges: int = 100_000, seed: int = 0):
+def sharded_scaleout(stream, shards: int, repeat: int = 3):
+    """Steady-state ingestion seconds for ``ShardedHiggs`` at S=shards
+    vs the S=1 degenerate case; returns (s1_s, sharded_s, summaries).
+
+    Both variants feed the identical leaf-aligned batches; the sharded
+    instance is primed with one empty insert before the clock starts so
+    worker-fork time (a per-process constant, not a per-edge cost) stays
+    out of the steady-state number.  Repeats are *interleaved* (s1, sS,
+    s1, sS, ...) and each side keeps its best, so machine-load drift
+    during the measurement cannot systematically favor one variant.
+    """
+    from repro.core.params import HiggsParams
+    from repro.shard import ShardedHiggs
+
+    n = len(stream[0])
+    p = common.DEFAULT_KW["HIGGS"]
+    chunk = HiggsParams(**p).chunk_size
+    batch = max(chunk, 32768 // chunk * chunk)
+    variants = (("s1", 1), (f"s{shards}", shards))
+
+    def build(S):
+        sk = ShardedHiggs(shards=S, **p)
+        sk.insert(*(np.zeros(0, a.dtype) for a in stream))      # prime
+        return sk
+
+    secs = {tag: float("inf") for tag, _ in variants}
+    out = {}
+    for tag, S in variants:
+        _feed(build(S), stream, batch)             # warm all shapes
+    for _ in range(repeat):
+        for tag, S in variants:
+            sk = build(S)
+            secs[tag] = min(secs[tag], _feed(sk, stream, batch))
+            out[tag] = sk            # runs are bit-identical; keep last
+    for tag, _ in variants:
+        common.emit(f"throughput/ingest/higgs_sharded_{tag}",
+                    secs[tag] / n * 1e6,
+                    f"edges_per_s={n / secs[tag]:.0f}")
+    speedup = secs["s1"] / secs[f"s{shards}"]
+    common.emit("throughput/ingest/shard_speedup", speedup,
+                f"s1={secs['s1']:.2f}s;s{shards}="
+                f"{secs[f's{shards}']:.2f}s;mode={out[f's{shards}']._mode}")
+    return secs["s1"], secs[f"s{shards}"], out
+
+
+def run(n_edges: int = 100_000, seed: int = 0, shards: int = 4):
     stream = lkml_like_stream(n_edges=n_edges, seed=seed)
     src, dst, w, t = stream
     t_max = int(t[-1])
     l_bits = max(int(np.ceil(np.log2(t_max + 1))), 1)
 
     serial_vs_batched(stream)
+    if shards > 1:
+        sharded_scaleout(balanced_stream(n_edges=n_edges, seed=seed),
+                         shards)
 
     sketches = common.build_all(stream, l_bits)
     for name, (sk, ins_s) in sketches.items():
@@ -110,17 +193,68 @@ def _assert_sketches_identical(a, b, tag: str) -> None:
                 f"{tag}: overflow {key}/{f} diverged"
 
 
-def smoke(n_edges: int = 30_000, seed: int = 0, min_speedup: float = 1.5):
+def smoke(n_edges: int = 30_000, seed: int = 0, min_speedup: float = 1.5,
+          shards: int = 4, json_path: str | None = None):
     """CI gate: batched must stay >= min_speedup x serial AND produce the
-    bit-identical sketch."""
-    stream = lkml_like_stream(n_edges=n_edges, seed=seed)
-    serial_s, batched_s, sk = serial_vs_batched(stream)
-    speedup = serial_s / batched_s
-    _assert_sketches_identical(sk["serial"], sk["batched"], "smoke")
-    assert speedup >= min_speedup, (
-        f"smoke: batched ingestion regressed to {speedup:.2f}x serial "
-        f"(floor {min_speedup}x)")
-    print(f"smoke OK: batched={speedup:.2f}x serial, sketches identical")
+    bit-identical sketch; with shards > 1, partition-parallel ingestion
+    must beat the S=1 degenerate case (>= 2x on hosts with >= 4 cores,
+    no-loss on smaller hosts, where the parallel ceiling is below 2x by
+    hardware).  Deterministic structure counters (leaves, space) are
+    recorded alongside the wall-clock ratios for the baseline compare.
+    """
+    # metrics are recorded before any assert and the JSON lands in a
+    # finally block: the uploaded artifact must exist precisely when a
+    # gate trips, or CI regressions come with no diagnostics attached
+    try:
+        stream = lkml_like_stream(n_edges=n_edges, seed=seed)
+        serial_s, batched_s, sk = serial_vs_batched(stream)
+        speedup = serial_s / batched_s
+        record("ingest/batched_speedup", speedup, "floor")
+        record("structure/n_leaves", len(sk["batched"].leaf_starts),
+               "exact")
+        record("structure/space_bytes", sk["batched"].space_bytes(),
+               "exact")
+        _assert_sketches_identical(sk["serial"], sk["batched"], "smoke")
+        assert speedup >= min_speedup, (
+            f"smoke: batched ingestion regressed to {speedup:.2f}x "
+            f"serial (floor {min_speedup}x)")
+        print(f"smoke OK: batched={speedup:.2f}x serial, "
+              f"sketches identical")
+        if shards > 1:
+            shard_smoke(n_edges=2 * n_edges, shards=shards)
+    finally:
+        if json_path:
+            write_json(json_path)
+
+
+def shard_smoke(n_edges: int, shards: int, seed: int = 0):
+    """The scale-out leg of the smoke gate (balanced stream)."""
+    stream = balanced_stream(n_edges=n_edges, seed=seed)
+    s1_s, sharded_s, out = sharded_scaleout(stream, shards)
+    speedup = s1_s / sharded_s
+    fleet = out[f"s{shards}"]
+    assert fleet.n_items == n_edges, "sharded smoke: items lost"
+    assert out["s1"].n_items == n_edges, "sharded smoke: items lost (S=1)"
+    record("ingest/shard_speedup", speedup, "floor")
+    record("ingest/edges_per_s_sharded", n_edges / sharded_s, "info")
+    record("structure/sharded_n_leaves", fleet.n_leaves, "exact")
+    record("structure/sharded_space_bytes", fleet.space_bytes(), "exact")
+    cores = os.cpu_count() or 1
+    # >= 4 cores is the acceptance bar; below that the hardware cannot
+    # reach 2x, so the gate only rejects sharding that LOSES throughput.
+    # HIGGS_MIN_SHARD_SPEEDUP overrides the floor so a contended CI
+    # runner can be recalibrated without a code change.
+    env_floor = os.environ.get("HIGGS_MIN_SHARD_SPEEDUP")
+    floor = float(env_floor) if env_floor else (2.0 if cores >= 4
+                                                else 0.75)
+    assert speedup >= floor, (
+        f"sharded smoke: {shards}-shard ingestion at {speedup:.2f}x "
+        f"S=1 (floor {floor}x on {cores} cores, mode={fleet._mode}; "
+        f"override with HIGGS_MIN_SHARD_SPEEDUP)")
+    out["s1"].close()
+    fleet.close()
+    print(f"sharded smoke OK: {shards} shards = {speedup:.2f}x S=1 "
+          f"({cores} cores, floor {floor}x)")
 
 
 def resume_smoke(n_edges: int = 30_000, seed: int = 0,
@@ -198,12 +332,19 @@ if __name__ == "__main__":
     ap.add_argument("--kill-at", type=int, default=0,
                     help="deterministic kill batch for --resume "
                          "(default: random)")
+    ap.add_argument("--shards", type=int, default=4,
+                    help="shard count for the scale-out comparison "
+                         "(0/1 skips it)")
+    ap.add_argument("--json", type=str, default="",
+                    help="write machine-readable smoke results here "
+                         "(the CI perf-gate artifact)")
     ap.add_argument("--n-edges", type=int, default=0)
     args = ap.parse_args()
     if args.resume:
         resume_smoke(n_edges=args.n_edges or 30_000,
                      kill_at=args.kill_at or None)
     elif args.smoke:
-        smoke(n_edges=args.n_edges or 30_000)
+        smoke(n_edges=args.n_edges or 30_000, shards=args.shards,
+              json_path=args.json or None)
     else:
-        run(n_edges=args.n_edges or 100_000)
+        run(n_edges=args.n_edges or 100_000, shards=args.shards)

@@ -213,6 +213,8 @@ class QueryPlanner:
         return np.asarray(res, np.float64)
 
     # -- host-side overflow-block probes ---------------------------------
+    # (also composed by repro.shard.planner.ShardedQueryPlanner, whose
+    # stacked fan-in path pairs each shard's plan with these OB scans)
 
     def _ob_edge(self, level, ids, f1s, bs, f1d, bd, ts, te, filter_time,
                  stats: QueryStats):

@@ -132,6 +132,7 @@ class QueryStats:
     device_dispatches: int = 0
     buckets_probed: int = 0
     ob_probes: int = 0          # host-side overflow-block scans
+    shards_touched: int = 0     # shards that did any work (sharded fleet)
 
     def merge(self, other: "QueryStats") -> None:
         for f in dataclasses.fields(self):

@@ -64,6 +64,11 @@ def _make_higgs(**kw):
     return HiggsSketch(params)
 
 
+def _make_sharded_higgs(**kw):
+    from repro.shard import ShardedHiggs
+    return ShardedHiggs(**kw)
+
+
 def _make_tcm(**kw):
     from repro.core.baselines import TCM
     return TCM(**kw)
@@ -107,6 +112,7 @@ def _make_oracle(**kw):
 
 
 register("higgs", _make_higgs)
+register("higgs-sharded", _make_sharded_higgs)
 register("tcm", _make_tcm)
 register("horae", _make_horae)
 register("horae-cpt", _make_horae_cpt)

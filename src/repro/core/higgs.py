@@ -409,6 +409,15 @@ class HiggsSketch(LegacyQueryMixin):
                 # a run longer than a chunk becomes an oversize leaf whose
                 # excess lands in the overflow block (the paper's OB case)
                 take = run_end if run_start == 0 else run_start
+                if take <= 0:
+                    # provably unreachable on a non-decreasing buffer
+                    # (the boundary run always has positive extent);
+                    # bisecting an out-of-order buffer can return 0,
+                    # which previously spun this loop forever
+                    raise ValueError(
+                        "non-monotonic timestamps in the pending "
+                        "buffer: stream items must arrive with "
+                        "non-decreasing t")
             if not final and take == rem:
                 # cannot prove the trailing timestamp run has ended — wait
                 break

@@ -9,6 +9,18 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
+
+
+def _env_flag(name: str, default: bool) -> bool:
+    """Boolean from the environment; unset/empty keeps the default.
+    Lets CI matrix over engine defaults (e.g. ``HIGGS_BATCHED_INGEST=0``
+    runs the whole suite on the legacy reference path) without touching
+    call sites."""
+    val = os.environ.get(name)
+    if val is None or val.strip() == "":
+        return default
+    return val.strip().lower() not in ("0", "false", "off", "no")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,8 +35,12 @@ class HiggsParams:
     use_mmb: bool = True    # multiple-mapping-buckets optimization
     use_ob: bool = True     # overflow blocks (lossless spill)
     entry_bytes: float = 0.0  # space accounting override; 0 => computed
-    batched_ingest: bool = True   # multi-leaf batched drain (False = the
-    #                               per-leaf reference path)
+    batched_ingest: bool = dataclasses.field(
+        default_factory=lambda: _env_flag("HIGGS_BATCHED_INGEST", True))
+    #                             # multi-leaf batched drain (False = the
+    #                             # per-leaf reference path; the default
+    #                             # honors HIGGS_BATCHED_INGEST so CI can
+    #                             # matrix both engines)
     insert_backend: str = "auto"  # "auto" -> "host" on CPU backends,
     #                               "vector" on TPU.  "vector" = vmapped
     #                               device placement, "host" = numpy

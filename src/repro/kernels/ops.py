@@ -61,3 +61,43 @@ def vertex_probe(nodes: NodeState, node_mask, fv, rows, ts, te, *,
                                    direction=direction,
                                    match_time=match_time,
                                    interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# stacked-shard probe entry points (repro.shard)
+# ---------------------------------------------------------------------------
+#
+# A sharded fleet answers fan-out queries by probing the SAME query batch
+# against S shards' node pools at one (level, time-range class).  These
+# entry points take the pools stacked on a leading shard axis — NodeState
+# fields (S, m, d, d, b), node_mask (S, m) — and return per-shard partial
+# sums (S, q) from ONE launch, so the fleet keeps the single-sketch
+# planner's one-dispatch-per-(level, class) contract.  The body vmaps the
+# reference probes (pure jnp, identical arithmetic to the per-shard path);
+# on a multi-device host the caller shards the leading axis across the
+# device mesh first (ShardedHiggs.place_stacked) and XLA partitions the
+# launch.
+
+@functools.partial(jax.jit, static_argnames=("match_time",))
+def edge_probe_stacked(nodes: NodeState, node_mask, fs, fd, rows, cols,
+                       ts, te, *, match_time: bool):
+    from repro.core import cmatrix
+
+    def one(n, m):
+        return cmatrix.probe_edge(n, m, fs, fd, rows, cols, ts, te,
+                                  match_time=match_time)
+
+    return jax.vmap(one)(nodes, node_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("direction", "match_time"))
+def vertex_probe_stacked(nodes: NodeState, node_mask, fv, rows, ts, te, *,
+                         direction: str, match_time: bool):
+    from repro.core import cmatrix
+
+    def one(n, m):
+        return cmatrix.probe_vertex(n, m, fv, rows, ts, te,
+                                    direction=direction,
+                                    match_time=match_time)
+
+    return jax.vmap(one)(nodes, node_mask)

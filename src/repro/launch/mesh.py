@@ -17,6 +17,26 @@ def make_local_mesh():
     return compat.make_mesh((1, 1), ("data", "model"))
 
 
+def make_shard_mesh(n_shards: int):
+    """1-D ``("shard",)`` mesh for a :class:`~repro.shard.ShardedHiggs`
+    fleet, or ``None`` when scale-out must stay on the host.
+
+    Uses the largest device count that divides ``n_shards`` (a stacked
+    (S, ...) probe batch shards its leading axis evenly); single-device
+    hosts get ``None`` and the fleet falls back to thread-pool /
+    sequential driving.
+    """
+    import jax
+    n_dev = len(jax.devices())
+    if n_dev < 2 or n_shards < 2:
+        return None
+    k = max(d for d in range(1, min(n_shards, n_dev) + 1)
+            if n_shards % d == 0)
+    if k < 2:
+        return None
+    return compat.make_mesh((k,), ("shard",), devices=jax.devices()[:k])
+
+
 def dp_axes(mesh) -> tuple:
     """Batch-sharding axes for a mesh (('pod','data') multi-pod)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

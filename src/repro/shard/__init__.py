@@ -1,0 +1,15 @@
+"""Sharded multi-sketch scale-out for HIGGS.
+
+* :mod:`repro.shard.partition` — source-vertex hash routing, stable
+  per-shard sub-streams, and the secondary destination-shard map.
+* :mod:`repro.shard.summary` — :class:`ShardedHiggs`, the
+  ``GraphSummary`` implementation (registered as ``"higgs-sharded"``).
+* :mod:`repro.shard.planner` — fan-out query execution with stacked
+  probes and merged ``QueryStats``.
+"""
+from repro.shard.partition import DstShardMap, partition_batch, shard_of
+from repro.shard.planner import ShardedQueryPlanner
+from repro.shard.summary import ShardedHiggs
+
+__all__ = ["ShardedHiggs", "ShardedQueryPlanner", "DstShardMap",
+           "partition_batch", "shard_of"]

@@ -1,0 +1,208 @@
+"""Partition-parallel ingestion engine: per-shard worker processes.
+
+Why processes and not threads: the CPU ingestion path (the ``"host"``
+insert backend) is thousands of small numpy calls that hold the GIL
+between kernels, so thread fan-out serializes — measured *slower* than
+sequential.  Worker processes ingest truly in parallel; each worker owns
+a disjoint subset of the shard sketches for the engine's whole lifetime,
+receives its shards' sub-batches over a pipe (arrival order preserved —
+per-shard state stays bit-identical to a sequential build), and ships
+its ``state_dict()``s back only when the parent needs to read
+(query/snapshot time), not per batch.
+
+Workers are forked, not spawned: fork costs ~100 ms (vs seconds to
+re-import jax under spawn) and is safe here because a worker only ever
+runs the numpy-only host placement engine — it never executes jax after
+the fork (the parent resolves ``insert_backend`` before building the
+engine and only selects this engine for ``"host"``).  On platforms
+without fork the summary falls back to thread/sequential driving.
+
+Protocol (parent -> worker): ``("insert", {sid: (src, dst, w, t)})``
+(no ack — pipelined), ``("flush", None)``, ``("state", None)``,
+``("load", {sid: (arrays, meta)})``, ``("quit", None)``.  A worker that
+hits an exception remembers it and reports it at the next acked
+command, so ingestion errors surface at the flush/collect barrier
+instead of vanishing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import multiprocessing as mp
+import os
+import traceback
+import warnings
+
+from repro.core.params import HiggsParams
+
+
+def fork_available() -> bool:
+    return "fork" in mp.get_all_start_methods()
+
+
+def _worker_main(conn, params_kw: dict, shard_ids: list[int]) -> None:
+    # local import keeps the worker's first action cheap under fork
+    from repro.core.higgs import HiggsSketch
+    sketches = {s: HiggsSketch(HiggsParams(**params_kw))
+                for s in shard_ids}
+    failure: str | None = None
+    while True:
+        try:
+            cmd, payload = conn.recv()
+        except EOFError:
+            return
+        # acked commands must ALWAYS reply exactly once — an exception
+        # mid-handler that skipped the ack would leave the parent blocked
+        # in recv() forever — so the reply is built under the try and
+        # sent afterwards, with the except path substituting the error
+        reply = None
+        try:
+            if cmd == "insert":
+                if failure is None:
+                    for s, part in payload.items():
+                        sketches[s].insert(*part)
+            elif cmd == "flush":
+                if failure is None:
+                    for sk in sketches.values():
+                        sk.flush()
+                reply = ("err", failure) if failure else ("ok", None)
+            elif cmd == "state":
+                if failure is None:
+                    reply = ("ok", {s: sk.state_dict()
+                                    for s, sk in sketches.items()})
+                else:
+                    reply = ("err", failure)
+            elif cmd == "load":
+                for s, (arrays, meta) in payload.items():
+                    sketches[s].load_state(arrays, meta)
+                failure = None
+                reply = ("ok", None)
+            elif cmd == "quit":
+                return
+        except Exception:
+            if failure is None:
+                failure = traceback.format_exc()
+            if cmd in ("flush", "state", "load"):
+                reply = ("err", failure)
+        if reply is not None:
+            try:
+                conn.send(reply)
+            except (BrokenPipeError, OSError):
+                return
+
+
+class ShardProcessEngine:
+    """Drives ``n_shards`` sketches across ``workers`` forked processes.
+
+    Shard ``s`` lives in worker ``s % workers``; the parent never holds
+    authoritative shard state while the engine is open — it collects
+    snapshots at read barriers (:meth:`collect`).
+    """
+
+    def __init__(self, n_shards: int, params: HiggsParams,
+                 workers: int | None = None,
+                 seed_states: dict | None = None):
+        if not fork_available():
+            raise RuntimeError("ShardProcessEngine requires the fork "
+                               "start method")
+        if not (params.batched_ingest and params.use_ob):
+            # belt and braces with ShardedHiggs._resolve_parallel: both
+            # ablations route through jitted jax code in the drain,
+            # which must never execute in a forked worker
+            raise ValueError("worker processes need the numpy-only "
+                             "drain (batched_ingest=True, use_ob=True)")
+        if workers is None:
+            workers = os.cpu_count() or 1
+        self.n_shards = n_shards
+        self.workers = max(1, min(workers, n_shards))
+        self._owner = [s % self.workers for s in range(n_shards)]
+        ctx = mp.get_context("fork")
+        params_kw = {**dataclasses.asdict(params),
+                     # workers must never touch jax post-fork: the
+                     # parent resolved the backend already
+                     "insert_backend": "host"}
+        self._conns = []
+        self._procs = []
+        for wi in range(self.workers):
+            parent_conn, child_conn = ctx.Pipe()
+            proc = ctx.Process(
+                target=_worker_main,
+                args=(child_conn, params_kw,
+                      [s for s in range(n_shards)
+                       if self._owner[s] == wi]),
+                daemon=True)
+            with warnings.catch_warnings():
+                # jax warns that fork + its internal threads can
+                # deadlock; the workers are numpy-only by construction
+                # (insert_backend forced to "host" above) and never run
+                # jax code after the fork
+                warnings.filterwarnings(
+                    "ignore", message=".*os.fork.*", category=RuntimeWarning)
+                proc.start()
+            child_conn.close()
+            self._conns.append(parent_conn)
+            self._procs.append(proc)
+        if seed_states:
+            self._load(seed_states)
+
+    # ------------------------------------------------------------------
+
+    def _per_worker(self, by_shard: dict) -> list[dict]:
+        out: list[dict] = [{} for _ in range(self.workers)]
+        for s, v in by_shard.items():
+            out[self._owner[s]][s] = v
+        return out
+
+    def _ack(self, conn):
+        status, payload = conn.recv()
+        if status == "err":
+            raise RuntimeError(f"shard worker failed:\n{payload}")
+        return payload
+
+    def insert(self, parts: dict) -> None:
+        """Enqueue ``{shard_id: (src, dst, w, t)}`` sub-batches; returns
+        as soon as the pipes accept them (workers ingest concurrently
+        with the caller's next partition pass)."""
+        for wi, payload in enumerate(self._per_worker(parts)):
+            if payload:
+                self._conns[wi].send(("insert", payload))
+
+    def flush(self) -> None:
+        for conn in self._conns:
+            conn.send(("flush", None))
+        for conn in self._conns:
+            self._ack(conn)
+
+    def collect(self) -> dict:
+        """Barrier: every worker's pending inserts are applied (FIFO
+        pipes), then returns ``{shard_id: (arrays, meta)}`` snapshots."""
+        for conn in self._conns:
+            conn.send(("state", None))
+        states: dict = {}
+        for conn in self._conns:
+            states.update(self._ack(conn))
+        return states
+
+    def _load(self, states: dict) -> None:
+        for wi, payload in enumerate(self._per_worker(states)):
+            if payload:
+                self._conns[wi].send(("load", payload))
+                self._ack(self._conns[wi])
+
+    def close(self) -> None:
+        for conn, proc in zip(self._conns, self._procs):
+            try:
+                conn.send(("quit", None))
+            except (BrokenPipeError, OSError):
+                pass
+            conn.close()
+        for proc in self._procs:
+            proc.join(timeout=5)
+            if proc.is_alive():
+                proc.terminate()
+        self._conns, self._procs = [], []
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass

@@ -1,0 +1,149 @@
+"""Host-side hash partitioning for the sharded HIGGS summary.
+
+Edges are routed to shards by their **source** vertex: ``shard_of(src)``
+is a salted mix32 hash reduced mod S, so a shard's sub-stream is exactly
+the stable subsequence of the input stream whose sources hash there.
+Stability matters: each per-shard :class:`~repro.core.higgs.HiggsSketch`
+must see its items in arrival order (leaf boundaries are a function of
+the item sequence), which is what makes the per-shard bit-equality
+contract testable against an independently built single sketch.
+
+Destination-side routing cannot reuse the same function — an edge's
+residence is decided by its source — so :class:`DstShardMap` maintains
+the secondary partition map: for every destination vertex ever seen, a
+bitmask of the shards holding at least one of its in-edges.  ``in``
+direction vertex queries consult it to fan out only to shards that can
+contribute (with ``shard_of(v)`` as the deterministic fallback for
+never-seen vertices, which keeps the S=1 degenerate case bit-identical
+to an unsharded sketch).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import hashing
+
+# salt decorrelates shard routing from the sketch's own bucket hashing;
+# a shared hash would make every shard see a biased slice of hash space
+_SHARD_SALT = 0x85EBCA6B
+
+# bitmask routing (uint64 masks in the persisted map) caps the fan-out
+MAX_SHARDS = 64
+
+
+def shard_of(vertex_ids, n_shards: int, seed: int) -> np.ndarray:
+    """Stable shard id per vertex: salted mix32 reduced mod S."""
+    v = np.asarray(vertex_ids, np.uint32)
+    if n_shards == 1:
+        return np.zeros(v.shape, np.uint32)
+    return hashing.np_mix32(v, seed ^ _SHARD_SALT) % np.uint32(n_shards)
+
+
+def partition_batch(src, dst, w, t, n_shards: int, seed: int):
+    """Split one stream batch into per-shard stable subsequences.
+
+    One host pass: a stable argsort of the shard ids groups every shard's
+    items contiguously while preserving arrival order inside each group.
+    Returns ``(sids, parts)`` where ``parts[s]`` is the ``(src, dst, w,
+    t)`` tuple for shard ``s`` (empty arrays for shards with no items).
+    """
+    src = np.asarray(src, np.uint32)
+    dst = np.asarray(dst, np.uint32)
+    w = np.asarray(w, np.float32)
+    t = np.asarray(t, np.uint32)
+    sids = shard_of(src, n_shards, seed)
+    if n_shards == 1:
+        return sids, [(src, dst, w, t)]
+    order = np.argsort(sids, kind="stable")
+    counts = np.bincount(sids, minlength=n_shards)
+    bounds = np.concatenate([[0], np.cumsum(counts)])
+    parts = []
+    for s in range(n_shards):
+        idx = order[bounds[s]:bounds[s + 1]]
+        parts.append((src[idx], dst[idx], w[idx], t[idx]))
+    return sids, parts
+
+
+class DstShardMap:
+    """Secondary partition map: destination vertex -> shard bitmask.
+
+    Grows with the number of *distinct* destination vertices (not with
+    the stream).  ``update`` sits on the ingestion hot path — the
+    parent's serial work directly erodes the shard-parallel speedup —
+    so it only stashes the batch's (dst, shard) codes (one vectorized
+    fuse, no Python loop); the dict merge happens lazily at the first
+    read, deduplicated across *all* pending batches at once
+    (``np.unique`` + per-unique-destination ``bitwise_or.reduceat``),
+    mirroring the process engine's read-barrier design.  ``shards_for``
+    routes ``in`` direction vertex queries; vertices never seen as a
+    destination fall back to ``shard_of(v)`` so routing is always
+    deterministic.
+    """
+
+    def __init__(self, n_shards: int, seed: int):
+        if not 1 <= n_shards <= MAX_SHARDS:
+            raise ValueError(f"n_shards must be in [1, {MAX_SHARDS}], "
+                             f"got {n_shards}")
+        self.n_shards = n_shards
+        self.seed = seed
+        self._mask: dict[int, int] = {}
+        self._pending: list[np.ndarray] = []
+
+    def update(self, dst: np.ndarray, sids: np.ndarray) -> None:
+        """Record that shard ``sids[i]`` holds an in-edge of ``dst[i]``."""
+        if len(dst) == 0:
+            return
+        self._pending.append(dst.astype(np.uint64) * MAX_SHARDS
+                             + sids.astype(np.uint64))
+
+    def _consolidate(self) -> None:
+        if not self._pending:
+            return
+        pairs = np.unique(np.concatenate(self._pending))
+        self._pending.clear()
+        keys = pairs // MAX_SHARDS
+        bits = np.uint64(1) << (pairs % MAX_SHARDS)
+        # pairs are sorted, so equal keys are contiguous: one reduceat
+        # yields each distinct destination's combined bitmask
+        uniq, idx = np.unique(keys, return_index=True)
+        masks = np.bitwise_or.reduceat(bits, idx)
+        get = self._mask.get
+        for v, m in zip(uniq.tolist(), masks.tolist()):
+            self._mask[v] = get(v, 0) | m
+
+    def shards_for(self, v: int) -> list[int]:
+        """Shards to fan an ``in`` query for vertex ``v`` out to."""
+        self._consolidate()
+        mask = self._mask.get(int(v), 0)
+        if mask == 0:
+            return [int(shard_of([v], self.n_shards, self.seed)[0])]
+        return [s for s in range(self.n_shards) if mask & (1 << s)]
+
+    def routing_matrix(self, vs: np.ndarray) -> np.ndarray:
+        """(S, q) bool routing mask for a batch of queried vertices."""
+        self._consolidate()
+        out = np.zeros((self.n_shards, len(vs)), bool)
+        for qi, v in enumerate(np.asarray(vs).tolist()):
+            for s in self.shards_for(v):
+                out[s, qi] = True
+        return out
+
+    def __len__(self) -> int:
+        self._consolidate()
+        return len(self._mask)
+
+    def space_bytes(self) -> float:
+        """4-byte key + 8-byte bitmask per distinct destination."""
+        return 12.0 * len(self)
+
+    # -- persistence ----------------------------------------------------
+
+    def state_arrays(self) -> dict[str, np.ndarray]:
+        self._consolidate()
+        keys = np.fromiter(self._mask.keys(), np.uint32, len(self._mask))
+        masks = np.fromiter(self._mask.values(), np.uint64, len(self._mask))
+        return {"dstmap/keys": keys, "dstmap/masks": masks}
+
+    def load(self, keys: np.ndarray, masks: np.ndarray) -> None:
+        self._pending.clear()
+        self._mask = {int(k): int(m) for k, m in zip(keys, masks)}

@@ -1,0 +1,195 @@
+"""Shard-aware query planning: route, fan out, merge.
+
+Routing rules (see :mod:`repro.shard.partition`):
+
+* Edge-lowered queries (``EdgeQuery``/``PathQuery``/``SubgraphQuery``)
+  route **per edge** by ``shard_of(src)`` — each edge lives in exactly
+  one shard, so the merge is a scatter, not a sum.
+* ``VertexQuery(direction="out")`` routes by ``shard_of(v)`` the same
+  way.
+* ``VertexQuery(direction="in")`` fans out: in-edges of a vertex are
+  spread across shards, so the answer is the **sum** of per-shard
+  answers over the shards in the vertex's :class:`DstShardMap` bitmask.
+  The fan-in probe is *stacked*: per (level, time-range class), every
+  contributing shard's node pool is gathered once and probed with one
+  :func:`repro.kernels.ops.vertex_probe_stacked` launch — one device
+  dispatch for all shards, mirroring the single-sketch planner's
+  one-dispatch-per-(level, class) contract at the fleet level.
+
+``QueryStats`` accounting: per-shard executions are merged with
+:meth:`QueryStats.merge` (so ``buckets_probed``/``ob_probes``/dispatch
+counters sum across the fleet), then ``n_queries`` is overwritten with
+the *caller's* batch size — sub-batches are an implementation detail —
+and ``shards_touched`` records how many shards did any work.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.api.queries import (EDGE_LOWERED, EdgeQuery, QueryBatch,
+                               QueryResult, QueryStats, VertexQuery)
+from repro.core import cmatrix
+from repro.core.cmatrix import pow2_pad as _pow2_pad
+from repro.shard.partition import shard_of
+
+if TYPE_CHECKING:  # summary imports this module
+    from repro.shard.summary import ShardedHiggs
+
+
+class ShardedQueryPlanner:
+    """Executes typed query batches against a :class:`ShardedHiggs`.
+
+    Stateless beyond lifetime accounting: plan memoization lives in each
+    shard's own :class:`~repro.api.planner.QueryPlanner`, which also
+    keeps restore-time invalidation per shard (``load_state`` on a shard
+    reseeds its cache exactly like the unsharded path).
+    """
+
+    def __init__(self, summary: "ShardedHiggs"):
+        self.summary = summary
+        self.lifetime = QueryStats()
+
+    def execute(self, queries: QueryBatch) -> QueryResult:
+        sm = self.summary
+        S = sm.n_shards
+        stats = QueryStats(n_queries=len(queries))
+        values: list = [None] * len(queries)
+
+        sub: list[list] = [[] for _ in range(S)]     # per-shard sub-batch
+        recs: list[list] = [[] for _ in range(S)]    # (qi, scatter idx)
+        acc: dict[int, np.ndarray] = {}              # qi -> per-item values
+        fanin: dict[tuple[int, int], list] = {}      # (ts, te) -> [(qi, v)]
+
+        for qi, q in enumerate(queries):
+            if isinstance(q, EDGE_LOWERED):
+                src, dst = q.edge_arrays()
+                if len(src) == 0:
+                    values[qi] = q.reduce(np.zeros((0,), np.float64))
+                    continue
+                acc[qi] = np.zeros((len(src),), np.float64)
+                sids = shard_of(src, S, sm.params.seed)
+                for s in np.unique(sids):
+                    idx = np.nonzero(sids == s)[0]
+                    sub[s].append(EdgeQuery(src[idx], dst[idx], q.ts, q.te))
+                    recs[s].append((qi, idx))
+            elif isinstance(q, VertexQuery):
+                if q.direction == "out":
+                    acc[qi] = np.zeros((len(q.v),), np.float64)
+                    sids = shard_of(q.v, S, sm.params.seed)
+                    for s in np.unique(sids):
+                        idx = np.nonzero(sids == s)[0]
+                        sub[s].append(VertexQuery(q.v[idx], q.ts, q.te,
+                                                  "out"))
+                        recs[s].append((qi, idx))
+                else:
+                    fanin.setdefault((q.ts, q.te), []).append((qi, q.v))
+            else:
+                raise TypeError(
+                    f"unsupported query type: {type(q).__name__}")
+
+        touched = np.zeros((S,), bool)
+        for s in range(S):
+            if not sub[s]:
+                continue
+            touched[s] = True
+            res = sm.shards[s].query(sub[s])
+            stats.merge(res.stats)
+            for (qi, idx), val in zip(recs[s], res.values):
+                acc[qi][idx] = np.asarray(val, np.float64)
+
+        for (ts, te), jobs in fanin.items():
+            vs = np.concatenate([v for _, v in jobs])
+            out, used = self._fanin_vertex(vs, ts, te, stats)
+            touched |= used
+            off = 0
+            for qi, v in jobs:
+                acc[qi] = out[off:off + len(v)]
+                off += len(v)
+
+        for qi, q in enumerate(queries):
+            if values[qi] is None:
+                values[qi] = q.reduce(acc[qi])
+
+        stats.n_queries = len(queries)
+        stats.shards_touched = int(touched.sum())
+        self.lifetime.merge(stats)
+        return QueryResult(values, stats)
+
+    # ------------------------------------------------------------------
+    # stacked fan-in probe for ``in`` direction vertex queries
+    # ------------------------------------------------------------------
+
+    def _fanin_vertex(self, vs: np.ndarray, ts: int, te: int,
+                      stats: QueryStats):
+        """(q,) summed answers over the routed shards, plus the (S,) mask
+        of shards that contributed any probe."""
+        sm = self.summary
+        route = sm.dst_map.routing_matrix(vs)        # (S, q) bool
+        shard_ids = [s for s in range(sm.n_shards) if route[s].any()]
+        out = np.zeros((len(vs),), np.float64)
+        used = np.zeros((sm.n_shards,), bool)
+        if not shard_ids:
+            return out, used
+        used[shard_ids] = True
+        # identical params across shards => identical query coordinates
+        f1, base = sm.shards[0]._query_coords(vs, "d")
+
+        plans = {s: sm.shards[s].planner.plan(ts, te, stats)
+                 for s in shard_ids}
+        levels = sorted({lvl for plan, _ in plans.values() for lvl in plan})
+        for level in levels:
+            per_shard = [(s, np.asarray(plans[s][0][level]))
+                         for s in shard_ids if level in plans[s][0]]
+            out += self._probe_level_stacked(per_shard, route, level, f1,
+                                             base, ts, te, False, stats)
+            for s, ids in per_shard:
+                ob = sm.shards[s].planner._ob_vertex(
+                    level, ids, f1, base, ts, te, "in", False, stats)
+                out += ob * route[s]
+        filt = [(s, np.asarray(plans[s][1])) for s in shard_ids
+                if plans[s][1]]
+        if filt:
+            out += self._probe_level_stacked(filt, route, 1, f1, base,
+                                             ts, te, True, stats)
+            for s, ids in filt:
+                ob = sm.shards[s].planner._ob_vertex(
+                    1, ids, f1, base, ts, te, "in", True, stats)
+                out += ob * route[s]
+        return out, used
+
+    def _probe_level_stacked(self, per_shard, route, level, f1, base,
+                             ts, te, filter_time, stats: QueryStats):
+        """One stacked launch over every contributing shard's nodes at
+        one (level, range class); returns the routed (q,) float64 sum."""
+        from repro.kernels import ops
+        import jax.numpy as jnp
+        sm = self.summary
+        live = [(s, ids) for s, ids in per_shard
+                if len(ids) and level <= len(sm.shards[s].pools)
+                and sm.shards[s].pools[level - 1].n > 0]
+        q = len(np.asarray(f1))
+        if not live:
+            return np.zeros((q,), np.float64)
+        p = sm.params
+        r = p.r if p.use_mmb else 1
+        pad = _pow2_pad(max(len(ids) for _, ids in live))
+        gathered = [sm.shards[s].pools[level - 1].gather(ids, pad)
+                    for s, ids in live]
+        nodes = type(gathered[0][0])(
+            *(jnp.stack([getattr(g[0], name) for g in gathered])
+              for name in type(gathered[0][0])._fields))
+        mask = jnp.stack([g[1] for g in gathered])
+        nodes, mask = sm.place_stacked(nodes, mask)
+        f_l, rows = cmatrix.coords_at_level(f1, base, level, p)
+        stats.device_dispatches += 1
+        stats.buckets_probed += sum(len(ids) for _, ids in live) \
+            * r * p.d(level) * q
+        res = ops.vertex_probe_stacked(nodes, mask, f_l, rows,
+                                       np.uint32(ts), np.uint32(te),
+                                       direction="in",
+                                       match_time=filter_time)
+        part = np.asarray(res, np.float64)           # (k, q)
+        sel = np.stack([route[s] for s, _ in live])  # (k, q)
+        return (part * sel).sum(axis=0)

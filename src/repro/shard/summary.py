@@ -1,0 +1,328 @@
+"""``ShardedHiggs``: S independent HIGGS forests behind one summary.
+
+Scale-out by partition: every stream edge is routed to exactly one
+per-shard :class:`~repro.core.higgs.HiggsSketch` by a salted hash of its
+source vertex, so each shard is a *complete, independent* HIGGS summary
+of its sub-stream — per-shard state is bit-identical to a single sketch
+built over that partition alone (the testable contract), shards never
+synchronize during ingestion, and the fleet answers queries through the
+shard-aware planner (:mod:`repro.shard.planner`).
+
+Ingestion partitions each incoming batch in one host pass
+(:func:`repro.shard.partition.partition_batch`) and drives all shards'
+batched drains in parallel.  The execution mode resolves per host:
+
+* ``"process"`` (the CPU default) — forked worker processes via
+  :class:`~repro.shard.engine.ShardProcessEngine`.  Workers own the
+  authoritative shard state between read barriers; any read
+  (query / snapshot / accounting) first collects worker snapshots into
+  the local shard replicas (``_sync``), so callers always observe the
+  exact current state, pending buffers included.
+* ``"threads"`` — a thread pool; only useful when the per-shard drain
+  releases the GIL (the jitted ``"vector"``/``"pallas"`` backends, i.e.
+  real accelerators).  On a multi-device host the stacked probe path
+  additionally places pools across a 1-D device mesh
+  (:func:`repro.launch.mesh.make_shard_mesh`).
+* ``"none"`` — sequential; also the S=1 degenerate case, which is
+  bit-identical to an unsharded ``HiggsSketch`` end to end.
+
+The full ``GraphSummary`` protocol is implemented, so
+``make_summary("higgs-sharded", shards=4, ...)`` drops into the
+registry, benchmarks, stream pipeline, and persistence layers
+unchanged; ``state_dict``/``load_state`` nest per-shard manifests so
+``StreamPipeline.run_resumable`` and ``repro.api.restore_summary``
+work without modification.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+import numpy as np
+
+from repro.api.protocol import LegacyQueryMixin
+from repro.api.queries import QueryBatch, QueryResult
+from repro.core.higgs import HiggsSketch
+from repro.core.params import HiggsParams
+from repro.shard.engine import ShardProcessEngine, fork_available
+from repro.shard.partition import DstShardMap, partition_batch
+from repro.shard.planner import ShardedQueryPlanner
+
+_PARALLEL_MODES = ("auto", "process", "threads", "none")
+
+
+class ShardedHiggs(LegacyQueryMixin):
+    """Hash-partitioned fleet of ``HiggsSketch`` shards.
+
+    ``shards``: partition count S (1..64); ``parallel``: ``"auto"``
+    (process fan-out on multi-core CPU hosts, threads for accelerator
+    backends, sequential otherwise), ``"process"``, ``"threads"``, or
+    ``"none"``.  Remaining kwargs are :class:`HiggsParams` fields shared
+    by every shard (or pass ``params=``).
+    """
+
+    name = "HIGGS-sharded"
+    snapshot_kind = "higgs-sharded"
+
+    def __init__(self, shards: int = 4, parallel: str = "auto",
+                 params: HiggsParams | None = None, **kw):
+        if parallel not in _PARALLEL_MODES:
+            raise ValueError(f"parallel must be one of {_PARALLEL_MODES}, "
+                             f"got {parallel!r}")
+        if params is None:
+            params = HiggsParams(**kw)
+        elif kw:
+            raise TypeError("pass either params= or HiggsParams fields, "
+                            "not both")
+        self.params = params
+        self.n_shards = int(shards)
+        self.parallel = parallel
+        # identical params (and seed) per shard: shard routing is already
+        # decorrelated by the partition salt, and shared params are what
+        # make query coordinates computable once for the whole fleet
+        self._shards = [HiggsSketch(params) for _ in range(self.n_shards)]
+        self.dst_map = DstShardMap(self.n_shards, params.seed)
+        self.planner = ShardedQueryPlanner(self)
+        self.mesh = None
+        if self.n_shards > 1:
+            from repro.launch.mesh import make_shard_mesh
+            self.mesh = make_shard_mesh(self.n_shards)
+        self._mode = self._resolve_parallel()
+        self._engine: Optional[ShardProcessEngine] = None
+        self._stale = False                # workers ahead of local state
+        self._pool: Optional[ThreadPoolExecutor] = None
+
+    # ------------------------------------------------------------------
+    # parallel drive
+    # ------------------------------------------------------------------
+
+    def _resolve_parallel(self) -> str:
+        mode = self.parallel
+        cores = os.cpu_count() or 1
+        # fork safety: a worker may only ever run the numpy-only drain.
+        # The host backend with the batched engine + overflow blocks is
+        # that path; the legacy per-leaf closer (batched_ingest=False)
+        # and the OB-ablation spill recursion (use_ob=False) both launch
+        # jitted jax computations, which must not run post-fork.
+        p = self.params
+        forkable = (self._shards[0]._backend == "host"
+                    and p.batched_ingest and p.use_ob)
+        if mode == "auto":
+            if self.n_shards == 1 or cores == 1:
+                return "none"
+            if forkable and fork_available():
+                return "process"
+            if self._shards[0]._backend != "host":
+                # jitted backends release the GIL during XLA execution
+                return "threads"
+            return "none"
+        if mode == "process":
+            if not forkable:
+                raise ValueError(
+                    "parallel='process' needs the jax-free drain: "
+                    "insert_backend='host' (or 'auto' on CPU) with "
+                    "batched_ingest=True and use_ob=True")
+            if not fork_available():
+                return "threads"
+        return mode
+
+    def _get_engine(self) -> ShardProcessEngine:
+        if self._engine is None:
+            seed = None
+            if self.n_items > 0:           # resume: re-seed workers
+                seed = {i: sh.state_dict()
+                        for i, sh in enumerate(self._shards)}
+            self._engine = ShardProcessEngine(self.n_shards, self.params,
+                                              seed_states=seed)
+        return self._engine
+
+    def _sync(self) -> None:
+        """Read barrier for process mode: pull every worker's snapshot
+        into the local shard replicas so reads observe the exact current
+        state (pending buffers included)."""
+        if self._engine is None or not self._stale:
+            return
+        for i, state in self._engine.collect().items():
+            self._shards[i].load_state(*state)
+        self._stale = False
+
+    @property
+    def shards(self) -> list[HiggsSketch]:
+        """The per-shard sketches, synced first: while the process
+        engine is ahead of the local replicas, direct shard reads would
+        otherwise observe stale state."""
+        self._sync()
+        return self._shards
+
+    def close(self) -> None:
+        """Shut down worker processes (after syncing their state) and
+        the thread pool.  Safe to call more than once; reads keep
+        working afterwards and the next insert restarts the engine."""
+        if self._engine is not None:
+            self._sync()
+            self._engine.close()
+            self._engine = None
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    def _map_shards(self, fn, jobs) -> None:
+        """Run ``fn(shard, *args)`` over jobs, on the thread pool in
+        ``"threads"`` mode (shards are disjoint state, so plain fan-out
+        is safe) and sequentially otherwise."""
+        if self._mode != "threads" or len(jobs) <= 1:
+            for shard, *args in jobs:
+                fn(shard, *args)
+            return
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=min(self.n_shards, os.cpu_count() or 1),
+                thread_name_prefix="higgs-shard")
+        futs = [self._pool.submit(fn, shard, *args)
+                for shard, *args in jobs]
+        for f in futs:
+            f.result()                 # surface the first worker error
+
+    def place_stacked(self, nodes, mask):
+        """Device placement for a stacked (S, ...) probe batch: shard the
+        leading axis across the device mesh when one is available; the
+        single-device identity fallback keeps CPU hosts untouched."""
+        if self.mesh is None:
+            return nodes, mask
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec
+        k = nodes.fp_s.shape[0]
+        if k % self.mesh.devices.size:
+            return nodes, mask         # unpadded remainder: keep local
+        spec = NamedSharding(self.mesh, PartitionSpec("shard"))
+        return (jax.device_put(nodes, spec), jax.device_put(mask, spec))
+
+    # ------------------------------------------------------------------
+    # GraphSummary surface
+    # ------------------------------------------------------------------
+
+    def insert(self, src, dst, w, t) -> None:
+        """Partition the batch by source vertex in one host pass, update
+        the destination routing map, and drive every shard's batched
+        drain through the resolved parallel mode."""
+        sids, parts = partition_batch(src, dst, w, t, self.n_shards,
+                                      self.params.seed)
+        self.dst_map.update(np.asarray(dst, np.uint32), sids)
+        if self._mode == "process":
+            self._get_engine().insert(
+                {s: parts[s] for s in range(self.n_shards)
+                 if len(parts[s][0])})
+            self._stale = True
+            return
+        jobs = [(self._shards[s], parts[s]) for s in range(self.n_shards)
+                if len(parts[s][0])]
+        self._map_shards(lambda sh, part: sh.insert(*part), jobs)
+
+    def flush(self) -> None:
+        if self._mode == "process" and self._engine is not None:
+            # workers close their pending leaves; pulling their (now
+            # larger) state stays lazy — a flush with no read after it
+            # must not pay O(total sketch state) pipe serialization
+            self._engine.flush()
+            self._stale = True
+            return
+        self._map_shards(lambda sh: sh.flush(),
+                         [(sh,) for sh in self._shards])
+
+    def query(self, queries: QueryBatch) -> QueryResult:
+        self._sync()
+        return self.planner.execute(queries)
+
+    def space_bytes(self) -> float:
+        """Fleet total: per-shard sketches plus the secondary
+        destination routing map (4-byte key + 8-byte bitmask each)."""
+        self._sync()
+        return sum(sh.space_bytes() for sh in self.shards) \
+            + self.dst_map.space_bytes()
+
+    # ------------------------------------------------------------------
+    # aggregate views
+    # ------------------------------------------------------------------
+
+    @property
+    def n_items(self) -> int:
+        self._sync()
+        return sum(sh.n_items for sh in self.shards)
+
+    @property
+    def structure_version(self) -> int:
+        self._sync()
+        return sum(sh.structure_version for sh in self.shards)
+
+    @property
+    def n_leaves(self) -> int:
+        self._sync()
+        return sum(len(sh.leaf_starts) for sh in self.shards)
+
+    @property
+    def n_levels(self) -> int:
+        self._sync()
+        return max((sh.n_levels for sh in self.shards), default=0)
+
+    def utilization(self) -> float:
+        self._sync()
+        ns = [sh.pools[0].n for sh in self.shards]
+        if sum(ns) == 0:
+            return 0.0
+        return float(sum(sh.utilization() * n
+                         for sh, n in zip(self.shards, ns)) / sum(ns))
+
+    # ------------------------------------------------------------------
+    # persistence: nested per-shard manifests
+    # ------------------------------------------------------------------
+
+    def state_dict(self):
+        """Per-shard states nested under ``shard<i>/`` key prefixes plus
+        the destination routing map; ``meta["config"]`` holds the
+        constructor kwargs so ``restore_summary`` rebuilds the fleet."""
+        self._sync()
+        arrays: dict[str, np.ndarray] = {}
+        shard_metas = []
+        for i, sh in enumerate(self.shards):
+            a, m = sh.state_dict()
+            for key, val in a.items():
+                arrays[f"shard{i}/{key}"] = val
+            shard_metas.append(m)
+        arrays.update(self.dst_map.state_arrays())
+        meta = {
+            "config": {"shards": self.n_shards, "parallel": self.parallel,
+                       **dataclasses.asdict(self.params)},
+            "shards": shard_metas,
+        }
+        return arrays, meta
+
+    def load_state(self, arrays: dict, meta: dict) -> None:
+        if getattr(self, "_engine", None) is not None:
+            # restored state supersedes the workers'; drop them so the
+            # next insert re-seeds a fresh engine from the local shards
+            self._engine.close()
+            self._engine = None
+            self._stale = False
+        cfg = dict(meta["config"])
+        shards = int(cfg.pop("shards"))
+        parallel = cfg.pop("parallel", "auto")
+        self.__init__(shards=shards, parallel=parallel,
+                      params=HiggsParams(**cfg))
+        if len(meta["shards"]) != self.n_shards:
+            raise ValueError(
+                f"snapshot holds {len(meta['shards'])} shards, "
+                f"expected {self.n_shards}")
+        for i, (sh, m) in enumerate(zip(self.shards, meta["shards"])):
+            prefix = f"shard{i}/"
+            sub = {k[len(prefix):]: v for k, v in arrays.items()
+                   if k.startswith(prefix)}
+            sh.load_state(sub, m)
+        self.dst_map.load(arrays["dstmap/keys"], arrays["dstmap/masks"])

@@ -1,0 +1,25 @@
+"""Shared test configuration.
+
+Registers a pinned hypothesis profile for CI: ``derandomize=True`` makes
+example generation a pure function of the test body (no per-run entropy,
+so a red CI run reproduces locally with the same examples) and the
+explicit ``deadline=None`` removes the wall-clock-per-example flake
+vector on loaded runners.  The profile loads whenever ``CI`` is set
+(GitHub Actions sets it) or ``HYPOTHESIS_PROFILE=ci`` is exported; local
+runs keep randomized exploration, which is what you want when *hunting*
+bugs rather than gating merges.
+"""
+import os
+
+try:
+    from hypothesis import settings
+except ImportError:                     # optional dev dependency
+    settings = None
+
+if settings is not None:
+    settings.register_profile("ci", derandomize=True, deadline=None,
+                              max_examples=15, print_blob=True)
+    settings.register_profile("dev", deadline=None, max_examples=15)
+    _profile = os.environ.get("HYPOTHESIS_PROFILE",
+                              "ci" if os.environ.get("CI") else "dev")
+    settings.load_profile(_profile)

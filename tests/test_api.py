@@ -95,6 +95,7 @@ class TestPlannerEquivalence:
     (which are themselves single-element batches) on randomized streams
     and randomized mixed batches."""
 
+    @pytest.mark.slow
     @pytest.mark.parametrize("params,seed", [
         (PARAMS, 0),
         (HiggsParams(d1=4, F1=6, b=2, r=2), 1),     # collision-heavy

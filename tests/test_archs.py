@@ -20,6 +20,7 @@ def mesh():
     return make_local_mesh()
 
 
+@pytest.mark.slow                      # LM-framework arch sweep, not HIGGS core
 @pytest.mark.parametrize("arch", cfglib.ARCH_IDS)
 def test_smoke_train_step(arch, mesh):
     cfg = cfglib.get_config(arch, reduced=True)
@@ -52,6 +53,7 @@ def test_smoke_train_step(arch, mesh):
                for b in leaves_after), f"{arch}: non-finite params"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", cfglib.ARCH_IDS)
 def test_smoke_prefill_and_decode(arch, mesh):
     cfg = cfglib.get_config(arch, reduced=True)
