@@ -10,6 +10,8 @@ comparisons, so each timing row also reports the structural counter
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -19,6 +21,31 @@ from repro.core.oracle import ExactOracle
 from repro.core.params import HiggsParams
 
 ROWS: list[str] = []
+
+# machine-readable results accumulated by the smoke gates; each entry is
+# {"value": float, "kind": "floor" | "exact" | "info"} — see
+# benchmarks/compare_bench.py for the gating semantics per kind
+METRICS: dict[str, dict] = {}
+
+
+def record(name: str, value: float, kind: str = "info") -> None:
+    METRICS[name] = {"value": float(value), "kind": kind}
+
+
+def write_json(path: str) -> None:
+    import platform
+    payload = {
+        "schema": 1,
+        "host": {
+            "cpu_count": os.cpu_count(),
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+        },
+        "metrics": METRICS,
+    }
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+    print(f"wrote {path} ({len(METRICS)} metrics)")
 
 # registry kwargs for the benchmark-default configurations
 DEFAULT_KW: dict[str, dict] = {

@@ -20,39 +20,18 @@ against ``benchmarks/baselines/BENCH_baseline.json`` (see
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
 import numpy as np
 
 from benchmarks import common
+from benchmarks.common import record, write_json
 from repro.stream.generator import balanced_stream, lkml_like_stream
 
-# machine-readable results accumulated by the smoke gates; each entry is
-# {"value": float, "kind": "floor" | "exact" | "info"} — see
-# benchmarks/compare_bench.py for the gating semantics per kind
-METRICS: dict[str, dict] = {}
-
-
-def record(name: str, value: float, kind: str = "info") -> None:
-    METRICS[name] = {"value": float(value), "kind": kind}
-
-
-def write_json(path: str) -> None:
-    import platform
-    payload = {
-        "schema": 1,
-        "host": {
-            "cpu_count": os.cpu_count(),
-            "platform": platform.platform(),
-            "python": platform.python_version(),
-        },
-        "metrics": METRICS,
-    }
-    with open(path, "w") as fh:
-        json.dump(payload, fh, indent=2, sort_keys=True)
-    print(f"wrote {path} ({len(METRICS)} metrics)")
+# the metric store lives in benchmarks.common (shared with space.py);
+# METRICS is re-exported for older tooling that poked it here
+METRICS = common.METRICS
 
 
 def _feed(sk, stream, batch: int) -> float:
@@ -257,6 +236,126 @@ def shard_smoke(n_edges: int, shards: int, seed: int = 0):
           f"({cores} cores, floor {floor}x)")
 
 
+def retention_smoke(n_edges: int = 60_000, seed: int = 0,
+                    n_windows: int = 10, json_path: str | None = None):
+    """CI gate for the bounded-memory temporal lifecycle.
+
+    Streams ~``n_windows`` retention horizons of data through a
+    ``retention=window`` sketch and asserts:
+
+    * **bounded** — resident ``space_bytes`` at every later window
+      boundary never exceeds ``1.2 x`` the two-window footprint (the
+      derived budget; dropping *below* it is bounded-memory working,
+      never a failure);
+    * **plateau** — the last five window boundaries stay within ±20% of
+      their own median: steady state is flat, not still trending;
+    * **correctness** — after the full stream, every in-window
+      edge/vertex/path/subgraph answer is bit-identical to a fresh
+      sketch built from the retained suffix alone;
+    * **budget policy** — a ``retention=budget`` sketch configured with
+      that same derived budget never exceeds it at any checkpoint.
+
+    Deterministic structure counters (retained segments, evictions,
+    steady-state bytes) are recorded for the baseline compare.
+    """
+    from repro.api import EdgeQuery, PathQuery, SubgraphQuery, VertexQuery
+    from repro.core.higgs import HiggsSketch
+    from repro.core.params import HiggsParams, RetentionPolicy
+
+    try:
+        rng = np.random.default_rng(seed)
+        t_max = n_windows * 10_000
+        src = rng.integers(0, 5_000, n_edges).astype(np.uint32)
+        dst = rng.integers(0, 5_000, n_edges).astype(np.uint32)
+        w = rng.integers(1, 16, n_edges).astype(np.float32)
+        t = np.sort(rng.integers(0, t_max, n_edges).astype(np.uint32))
+        horizon = t_max // n_windows
+        kw = dict(d1=8, F1=19, segment_levels=1)
+        sk = HiggsSketch(HiggsParams(
+            retention=RetentionPolicy.window(horizon), **kw))
+
+        per_window = n_edges // n_windows
+        series = []
+        for wi in range(n_windows):
+            s = slice(wi * per_window,
+                      n_edges if wi == n_windows - 1 else
+                      (wi + 1) * per_window)
+            sk.insert(src[s], dst[s], w[s], t[s])
+            series.append(sk.space_bytes())
+        sk.flush()
+
+        ref = series[1]                      # footprint after 2 windows
+        budget = 1.2 * ref
+        for wi, sb in enumerate(series[1:], start=2):
+            assert sb <= budget, (
+                f"retention smoke: space at window {wi} = {sb:.0f}B "
+                f"exceeds 1.2x the 2-window footprint {ref:.0f}B")
+        tail = series[-5:]
+        mid = float(np.median(tail))
+        for wi, sb in enumerate(tail, start=n_windows - len(tail) + 1):
+            assert abs(sb - mid) <= 0.2 * mid, (
+                f"retention smoke: steady state not flat — window {wi} "
+                f"= {sb:.0f}B vs tail median {mid:.0f}B")
+        print(f"retention smoke: space bounded by {budget:.0f}B and "
+              f"flat at {mid:.0f}B +/- 20% over the last {len(tail)} "
+              f"of {n_windows} windows")
+
+        # in-window answers == fresh sketch over the retained suffix
+        drop = sk.segments.items_dropped
+        fresh = HiggsSketch(HiggsParams(
+            retention=RetentionPolicy.window(horizon), **kw))
+        fresh.insert(src[drop:], dst[drop:], w[drop:], t[drop:])
+        fresh.flush()
+        ts0 = int(t[-1]) - horizon
+        queries = [
+            EdgeQuery(src[-256:], dst[-256:], ts0, int(t[-1])),
+            VertexQuery(src[-64:], ts0, int(t[-1]), "out"),
+            VertexQuery(dst[-64:], ts0 + horizon // 3, int(t[-1]), "in"),
+            PathQuery([int(src[-1]), int(dst[-1]), int(dst[-2])],
+                      ts0, int(t[-1])),
+            SubgraphQuery([(int(src[-i]), int(dst[-i]))
+                           for i in range(1, 9)], ts0, int(t[-1])),
+        ]
+        va = sk.query(queries).values
+        vb = fresh.query(queries).values
+        for i, (x, y) in enumerate(zip(va, vb)):
+            assert np.array_equal(np.asarray(x), np.asarray(y)), (
+                f"retention smoke: in-window query {i} diverged from "
+                f"the fresh retained-suffix sketch")
+        print("retention smoke: in-window answers bit-identical to "
+              "fresh retained-suffix sketch")
+
+        # budget policy: never exceeds the configured cap
+        bk = HiggsSketch(HiggsParams(
+            retention=RetentionPolicy.budget(budget), **kw))
+        for wi in range(n_windows):
+            s = slice(wi * per_window,
+                      n_edges if wi == n_windows - 1 else
+                      (wi + 1) * per_window)
+            bk.insert(src[s], dst[s], w[s], t[s])
+            assert bk.space_bytes() <= budget, (
+                f"retention smoke: budget sketch at "
+                f"{bk.space_bytes():.0f}B exceeds {budget:.0f}B")
+        bk.flush()
+        assert bk.space_bytes() <= budget
+        rs = sk.retention_stats()
+        record("retention/steady_state_bytes", series[-1], "exact")
+        record("retention/segments_retained", rs["segments_retained"],
+               "exact")
+        record("retention/segments_evicted", rs["segments_evicted"],
+               "exact")
+        record("retention/budget_space_bytes", bk.space_bytes(), "exact")
+        record("retention/budget_segments_coarse",
+               bk.retention_stats()["segments_coarse"], "exact")
+        print(f"retention smoke OK: steady state {series[-1]:.0f}B, "
+              f"{rs['segments_evicted']} segments evicted, budget sketch "
+              f"{bk.space_bytes():.0f}B <= {budget:.0f}B "
+              f"({bk.retention_stats()['segments_coarse']} coarse)")
+    finally:
+        if json_path:
+            write_json(json_path)
+
+
 def resume_smoke(n_edges: int = 30_000, seed: int = 0,
                  kill_at: int | None = None):
     """CI gate for crash-consistent persistence: ingest with periodic
@@ -332,6 +431,9 @@ if __name__ == "__main__":
     ap.add_argument("--kill-at", type=int, default=0,
                     help="deterministic kill batch for --resume "
                          "(default: random)")
+    ap.add_argument("--retention", type=str, default="",
+                    help="with --smoke: run the bounded-memory lifecycle "
+                         "gate instead (currently 'window')")
     ap.add_argument("--shards", type=int, default=4,
                     help="shard count for the scale-out comparison "
                          "(0/1 skips it)")
@@ -340,9 +442,17 @@ if __name__ == "__main__":
                          "(the CI perf-gate artifact)")
     ap.add_argument("--n-edges", type=int, default=0)
     args = ap.parse_args()
+    if args.retention and (args.resume or not args.smoke):
+        ap.error("--retention is a --smoke gate; run "
+                 "`--smoke --retention window`")
     if args.resume:
         resume_smoke(n_edges=args.n_edges or 30_000,
                      kill_at=args.kill_at or None)
+    elif args.smoke and args.retention:
+        if args.retention != "window":
+            ap.error("--retention currently supports only 'window'")
+        retention_smoke(n_edges=args.n_edges or 60_000,
+                        json_path=args.json or None)
     elif args.smoke:
         smoke(n_edges=args.n_edges or 30_000, shards=args.shards,
               json_path=args.json or None)

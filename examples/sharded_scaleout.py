@@ -39,6 +39,10 @@ def main():
     print(f"shard speedup: {results['higgs'][1] / dt_sharded:.2f}x "
           f"(mode={fleet._mode}, {fleet.n_shards} shards, "
           f"{fleet.n_leaves} leaves total)")
+    # per-batch shard-load telemetry: source partitioning is hostage to
+    # per-source skew (the PR 4 Lkml hot-sender caveat) — a fleet that
+    # routes > 50% of a batch to one shard warns once at ingest time
+    print(fleet.partition_stats.summary())
 
     # the first stream edges carry the earliest timestamps, so a range
     # anchored at 0 makes the queried edges actually present

@@ -18,6 +18,13 @@ batch level:
 
 ``QueryStats.device_dispatches`` counts the launches, making the
 <= 1-per-(level, range-class) contract checkable by tests.
+
+Windowed sketches change nothing structurally here: plans carry stable
+*global* node ids (``_LevelPool.gather`` translates them to physical
+window slots), coarse-segment roots arrive as ordinary plan entries at
+the segment-root level, and every eviction/coarsening bumps
+``structure_version`` so memoized plans over reclaimed nodes can never
+be replayed.
 """
 from __future__ import annotations
 

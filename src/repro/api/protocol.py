@@ -34,7 +34,18 @@ from repro.api.queries import (EDGE_LOWERED, EdgeQuery, PathQuery, Query,
 @runtime_checkable
 class GraphSummary(Protocol):
     """A graph-stream summary: ingest a stream, answer typed query batches,
-    report its space footprint."""
+    report its space footprint.
+
+    Summaries with a bounded-memory temporal lifecycle (``HiggsSketch``
+    and ``ShardedHiggs`` under a live
+    :class:`~repro.core.params.RetentionPolicy`) additionally expose
+    ``retention_stats() -> dict`` — eviction/coarsening counters and
+    resident bytes.  Harness code must treat it as optional
+    (``getattr(summary, "retention_stats", None)``), which is exactly
+    what the stream pipeline's ``on_retention`` hook does; it is not
+    part of the required protocol because the host-side baselines have
+    no lifecycle to report.
+    """
 
     name: str
 
@@ -79,6 +90,12 @@ class SnapshotMixin:
       instance from ``meta["config"]`` and overwrites all state, so the
       restored summary is bit-identical to the saved one (same query
       answers, same ``space_bytes``, same future-insert behavior).
+      For windowed summaries "all state" includes the segment-store
+      lifecycle: sealed-segment records, eviction/coarsening counters,
+      and every per-level window base — the *free* (reclaimed) prefix is
+      exactly what is **not** in the snapshot, so a restored windowed
+      sketch resumes retention where the saved one left off instead of
+      re-growing from the stream's origin.
 
     ``save`` writes one atomic checkpoint (tmp dir + rename, single
     manifest) via :func:`repro.checkpoint.save_checkpoint`; a preemption

@@ -24,6 +24,7 @@ from repro.core import cmatrix, hashing
 from repro.core.cmatrix import EMPTY, NodeState
 from repro.core.cmatrix import pow2_pad as _pow2_pad
 from repro.core.params import HiggsParams
+from repro.core.segments import SegmentStore
 
 
 class _LevelPool:
@@ -33,13 +34,39 @@ class _LevelPool:
     copy the whole pool per leaf on CPU backends); query gathers transfer
     only the probed subset.  On a real TPU deployment the pool would stay
     device-resident with donated updates — see DESIGN.md §3.
+
+    Node ids are **global** (stable across the stream's lifetime) while
+    the arrays hold only the retained window: ``base`` counts the nodes
+    the segment-store lifecycle has dropped from the front, so global id
+    ``u`` lives at physical slot ``u - base``.  With retention disabled
+    ``base`` stays 0 and global == physical, the original behavior.
     """
 
     def __init__(self, d: int, b: int):
         self.d, self.b = d, b
         self.n = 0
         self.cap = 0
+        self.base = 0
         self.arrs: Optional[dict] = None
+
+    @property
+    def total(self) -> int:
+        """Global node count ever appended (retained + dropped)."""
+        return self.base + self.n
+
+    def drop_prefix(self, k: int) -> None:
+        """Reclaim the ``k`` oldest retained slots (segment eviction /
+        coarsening): the retained suffix slides to the front in place,
+        capacity is kept for reuse by future appends."""
+        if k <= 0:
+            return
+        if k > self.n:
+            raise ValueError(f"cannot drop {k} of {self.n} nodes")
+        for name in NodeState._fields:
+            arr = self.arrs[name]
+            arr[: self.n - k] = arr[k: self.n].copy()
+        self.n -= k
+        self.base += k
 
     def _grow(self, new_cap: int) -> None:
         new = cmatrix.empty_node_arrays(new_cap, self.d, self.b)
@@ -49,13 +76,15 @@ class _LevelPool:
         self.arrs = new
         self.cap = new_cap
 
-    def load(self, arrs: dict, n: int, cap: int | None = None) -> None:
+    def load(self, arrs: dict, n: int, cap: int | None = None,
+             base: int = 0) -> None:
         """Overwrite this pool with ``n`` snapshot nodes, re-growing to
         the saved capacity so post-restore allocation behavior matches
         the uninterrupted run exactly."""
         self.arrs = None
         self.n = 0
         self.cap = 0
+        self.base = int(base)
         cap = max(cap if cap is not None else n, n)
         if cap == 0:
             return
@@ -89,10 +118,12 @@ class _LevelPool:
         return base
 
     def gather(self, ids: np.ndarray, pad_to: int):
-        """(NodeState stacked to pad_to, mask) for a list of node ids."""
+        """(NodeState stacked to pad_to, mask) for a list of **global**
+        node ids; the window translation to physical slots happens here
+        so every caller keeps speaking stable ids."""
         m = len(ids)
         idx = np.zeros((pad_to,), np.int64)
-        idx[:m] = ids
+        idx[:m] = np.asarray(ids, np.int64) - self.base
         mask = np.zeros((pad_to,), bool)
         mask[:m] = True
         nodes = NodeState(*(jnp.asarray(self.arrs[name][idx])
@@ -134,6 +165,17 @@ class _LeafIndex:
         self._starts[self.n:self.n + m] = ts0s
         self._ends[self.n:self.n + m] = ts1s
         self.n += m
+
+    def drop_prefix(self, k: int) -> None:
+        """Drop the ``k`` oldest interval keys (evicted or coarsened
+        leaves); the retained keys slide to the front in place."""
+        if k <= 0:
+            return
+        if k > self.n:
+            raise ValueError(f"cannot drop {k} of {self.n} leaf keys")
+        self._starts[: self.n - k] = self._starts[k: self.n].copy()
+        self._ends[: self.n - k] = self._ends[k: self.n].copy()
+        self.n -= k
 
     def load(self, starts: np.ndarray, ends: np.ndarray) -> None:
         """Overwrite with snapshot keys (fresh doubling storage)."""
@@ -200,6 +242,14 @@ class _OverflowStore:
         m = self._len[key]
         return {k: v[:m] for k, v in self._cols[key].items()}
 
+    def drop(self, level: int, node: int) -> int:
+        """Discard the entries of one (level, node) key — segment
+        eviction pruning; returns the number of entries freed."""
+        key = (level, node)
+        freed = self._len.pop(key, 0)
+        self._cols.pop(key, None)
+        return freed
+
     @property
     def data(self) -> dict:
         """Trimmed {(level, node): columns} view (accounting/tests)."""
@@ -238,6 +288,8 @@ class HiggsSketch(LegacyQueryMixin):
         self._buf: list[np.ndarray] = []           # pending raw items
         self._buf_len = 0
         self.n_items = 0
+        self.segments = SegmentStore(params)       # temporal lifecycle
+        self._t_last = 0                           # newest closed-leaf end
         self._version = 0                          # bumped on tree mutation
         self._probe_base = 0                       # legacy counter offset
         self.planner = QueryPlanner(self)
@@ -306,7 +358,8 @@ class HiggsSketch(LegacyQueryMixin):
         pools_meta = []
         for lvl, pool in enumerate(self.pools, start=1):
             pools_meta.append({"n": int(pool.n), "cap": int(pool.cap),
-                               "d": int(pool.d), "b": int(pool.b)})
+                               "d": int(pool.d), "b": int(pool.b),
+                               "base": int(pool.base)})
             src = pool.arrs if pool.arrs is not None else \
                 cmatrix.empty_node_arrays(0, pool.d, pool.b)
             for name in NodeState._fields:
@@ -324,6 +377,8 @@ class HiggsSketch(LegacyQueryMixin):
             "probe_counter": int(self.probe_counter),
             "pools": pools_meta,
             "ob_keys": ob_keys,
+            "t_last": int(self._t_last),
+            "segments": self.segments.meta(),
         }
         return arrays, meta
 
@@ -342,7 +397,8 @@ class HiggsSketch(LegacyQueryMixin):
             self.pools[lvl - 1].load(
                 {name: arrays[f"pool{lvl}/{name}"]
                  for name in NodeState._fields},
-                int(pm["n"]), cap=int(pm["cap"]))
+                int(pm["n"]), cap=int(pm["cap"]),
+                base=int(pm.get("base", 0)))
         self._leaves.load(arrays["leaf_starts"], arrays["leaf_ends"])
         self.ob.load({(int(lvl), int(node)):
                       {f: arrays[f"ob/{lvl}.{node}/{f}"]
@@ -352,6 +408,8 @@ class HiggsSketch(LegacyQueryMixin):
         self._buf = [buf] if buf.shape[1] else []
         self._buf_len = int(meta["buf_len"])
         self.n_items = int(meta["n_items"])
+        self._t_last = int(meta.get("t_last", 0))
+        self.segments.load(meta.get("segments"))
         self._version = int(meta["version"])
         self.planner.invalidate()
         self.probe_counter = int(meta["probe_counter"])
@@ -378,6 +436,9 @@ class HiggsSketch(LegacyQueryMixin):
     def flush(self) -> None:
         """Close the current partial leaf (end of stream / snapshot)."""
         self._drain(final=True)
+        if self.segments.active:
+            self._lifecycle()          # idempotent; a no-op drain must
+            #                            still settle expired segments
 
     def _drain(self, final: bool) -> None:
         """Split the pending buffer into every complete leaf at once.
@@ -438,6 +499,8 @@ class HiggsSketch(LegacyQueryMixin):
         else:
             for s, e in spans:
                 self._close_leaf(buf[:, s:e])
+        if self.segments.active:
+            self._lifecycle()
 
     def _close_leaf(self, chunk: np.ndarray) -> None:
         p = self.params
@@ -463,11 +526,15 @@ class HiggsSketch(LegacyQueryMixin):
             node, padded(hs, np.uint32), padded(hd, np.uint32),
             padded(w, np.float32), padded(t, np.uint32),
             jnp.asarray(valid), p)
-        leaf_id = self.pools[0].append(node)
+        leaf_id = self.pools[0].base + self.pools[0].append(node)
         self._leaves.append(int(t[0]), int(t[-1]))
+        self._t_last = max(self._t_last, int(t[-1]))
+        k = int(n_spill)
+        # item accounting: OB spill stays with this leaf; the ablation's
+        # recursive spill re-counts its items in the leaf it opens
+        self.segments.on_leaves([n if p.use_ob else n - k])
         self._version += 1
 
-        k = int(n_spill)
         if k:
             s_hs = np.asarray(spill["hs"][:k])
             s_hd = np.asarray(spill["hd"][:k])
@@ -551,10 +618,12 @@ class HiggsSketch(LegacyQueryMixin):
             spill_mask = np.asarray(spill)
             w_sp = np.asarray(w_merged)
 
-        base = self.pools[0].append_batch(host, nl)
+        base = self.pools[0].base + self.pools[0].append_batch(host, nl)
         starts = t_full[[s - s0 for s, _ in spans]]
         ends = t_full[[e - 1 - s0 for _, e in spans]]
         self._leaves.extend(starts, ends)
+        self._t_last = max(self._t_last, int(ends[-1]))
+        self.segments.on_leaves([e - s for s, e in spans])
         self._version += nl
 
         if spill_mask.any():
@@ -604,13 +673,19 @@ class HiggsSketch(LegacyQueryMixin):
 
     def _maybe_aggregate(self) -> None:
         p = self.params
+        cap = self.segments.level_cap
         level = 1
         while True:
             if level + 1 > p.max_levels:
                 return                              # fingerprints exhausted
+            if cap is not None and level + 1 > cap:
+                return          # hierarchy stops at the segment roots so
+                #                 every sealed segment stays a complete,
+                #                 independently evictable subtree
             pool = self.pools[level - 1]
-            parent_n = self.pools[level].n if level < len(self.pools) else 0
-            n_ready = pool.n // p.theta - parent_n
+            parent_n = self.pools[level].total if level < len(self.pools) \
+                else 0
+            n_ready = pool.total // p.theta - parent_n
             if n_ready <= 0:
                 return
             if level >= len(self.pools):
@@ -625,9 +700,9 @@ class HiggsSketch(LegacyQueryMixin):
         """Reference path: one ``aggregate_children`` launch per parent."""
         p = self.params
         pool = self.pools[level - 1]
-        while self.pools[level - 1].n - self.pools[level].n * p.theta \
-                >= p.theta:
-            u = self.pools[level].n                 # parent index to build
+        while self.pools[level - 1].total - self.pools[level].total \
+                * p.theta >= p.theta:
+            u = self.pools[level].total             # global parent id
             child_ids = np.arange(u * p.theta, (u + 1) * p.theta)
             children, _ = pool.gather(child_ids, p.theta)
             ob_cols = self._gather_child_obs(level, child_ids)
@@ -654,7 +729,9 @@ class HiggsSketch(LegacyQueryMixin):
         theta = p.theta
         pool = self.pools[level - 1]
         arrs = pool.arrs
-        sl = slice(u0 * theta, (u0 + m) * theta)
+        # u0 is the global parent id; children slots are window-physical
+        c0 = u0 * theta - pool.base
+        sl = slice(c0, c0 + m * theta)
         d = pool.d
         per = theta * d * d * pool.b
 
@@ -786,48 +863,166 @@ class HiggsSketch(LegacyQueryMixin):
                 jnp.asarray(wcol), jnp.asarray(vcol))
 
     # ------------------------------------------------------------------
+    # temporal lifecycle: sealing, eviction, coarsening compaction
+    # ------------------------------------------------------------------
+
+    def _lifecycle(self) -> None:
+        """Seal completed segments, then enforce the retention policy.
+
+        Runs after every drain (and on flush).  Everything here is a
+        deterministic function of the closed-leaf sequence alone — never
+        of insert batching — so per-shard eviction stays bit-identical
+        to an independently built sketch over the same sub-stream.
+        """
+        st = self.segments
+        while st.can_seal():
+            i0 = st.n_sealed * st.seg_leaves - st.fine_base_leaf
+            st.seal(int(self._leaves.starts[i0]),
+                    int(self._leaves.ends[i0 + st.seg_leaves - 1]))
+        pol = self.params.retention
+        if pol.kind == "window":
+            expire = self._t_last - pol.t_horizon
+            while st.records and st.records[0].t_end < expire:
+                self._evict_front()
+        elif pol.kind == "budget":
+            while self.space_bytes() > pol.max_bytes:
+                if st.n_coarse < len(st.records):
+                    self._coarsen_oldest_fine()
+                elif st.records:
+                    self._evict_front()     # every old segment is already
+                    #                         coarse: drop roots, oldest
+                    #                         first
+                else:
+                    break                   # only the active region is
+                    #                         left — the budget's floor
+
+    def _drop_segment_levels(self, lo_level: int, hi_level: int) -> None:
+        """Reclaim one segment's nodes (and overflow keys) at levels
+        ``lo_level..hi_level`` — always the oldest retained prefix at
+        each level, which is what keeps pool slots contiguous."""
+        st = self.segments
+        for lvl in range(lo_level, hi_level + 1):
+            pool = self.pools[lvl - 1]
+            cnt = st.nodes_per_segment(lvl)
+            for node in range(pool.base, pool.base + cnt):
+                self.ob.drop(lvl, node)
+            pool.drop_prefix(cnt)
+
+    def _evict_front(self) -> None:
+        """Evict the oldest retained segment wholesale: its slabs at
+        every resident level, its overflow keys, and (for fine
+        segments) its slice of the leaf-interval index."""
+        st = self.segments
+        seg = st.records.pop(0)
+        if seg.coarse:
+            self._drop_segment_levels(st.root_level, st.root_level)
+            st.items_coarsened -= seg.n_items
+        else:
+            self._drop_segment_levels(1, st.root_level)
+            self._leaves.drop_prefix(st.seg_leaves)
+        st.n_evicted += 1
+        st.items_evicted += seg.n_items
+        self._version += 1                 # invalidate memoized plans
+
+    def _coarsen_oldest_fine(self) -> None:
+        """Collapse the oldest fine segment into its retained root: drop
+        its leaves and mid-level ancestors (plus their overflow keys and
+        interval keys), keep the level-(L+1) root and the root's
+        overflow entries.  The segment's time range stays answerable at
+        segment resolution via :meth:`boundary_search`."""
+        st = self.segments
+        seg = st.records[st.n_coarse]
+        self._drop_segment_levels(1, st.levels)
+        self._leaves.drop_prefix(st.seg_leaves)
+        seg.coarse = True
+        st.items_coarsened += seg.n_items
+        self._version += 1
+
+    def retention_stats(self) -> dict:
+        """Lifecycle telemetry (also surfaced by the stream pipeline's
+        retention hook and the space benchmark)."""
+        st = self.segments
+        return {
+            "policy": self.params.retention.kind,
+            "segments_retained": len(st.records),
+            "segments_coarse": st.n_coarse,
+            "segments_evicted": st.n_evicted,
+            "items_evicted": int(st.items_evicted),
+            "items_coarsened": int(st.items_coarsened),
+            "base_leaf": int(st.fine_base_leaf),
+            "space_bytes": float(self.space_bytes()),
+        }
+
+    # ------------------------------------------------------------------
     # boundary search (paper Alg. 3) — canonical theta-ary decomposition
     # ------------------------------------------------------------------
 
     def boundary_search(self, ts: int, te: int):
         """Decompose [ts, te] into (plan, filtered_leaves):
 
-        plan: dict level -> list of node ids queried *without* time filter;
-        filtered_leaves: leaf ids queried *with* the [ts, te] filter.
+        plan: dict level -> list of global node ids queried *without*
+        time filter; filtered_leaves: global leaf ids queried *with* the
+        [ts, te] filter.
+
+        The search runs over the retained window: ``base`` (the global
+        id of the first leaf still resident at leaf resolution) offsets
+        every emitted id, and alignment is checked on global positions —
+        eviction is theta^L-aligned, so for every level the cascade can
+        still build (the cap is L+1 when a policy is live) the window-
+        relative grouping matches a fresh sketch built on the retained
+        suffix, which is what keeps in-window answers bit-identical.
+        Ranges overlapping *coarsened* segments are additionally covered
+        by those segments' retained root nodes: the whole root joins the
+        plan unfiltered, so a partially overlapping range is answered at
+        segment resolution — an overestimate, preserving HIGGS's
+        one-sided error.
         """
-        n1 = len(self.leaf_starts)
-        if n1 == 0 or te < ts:
+        if te < ts:
             return {}, []
-        li = int(np.searchsorted(self.leaf_starts, np.uint64(ts), "right")) - 1
+        plan: dict[int, list[int]] = {}
+        seg = self.segments
+        base = seg.fine_base_leaf
+        if seg.active:
+            roots = seg.coarse_roots_overlapping(ts, te)
+            if roots:
+                plan[seg.root_level] = roots
+        starts, ends = self.leaf_starts, self.leaf_ends
+        n1 = len(starts)
+        if n1 == 0:
+            return plan, []
+        li = int(np.searchsorted(starts, np.uint64(max(ts, 0)),
+                                 "right")) - 1
         li = max(li, 0)
-        ri = int(np.searchsorted(self.leaf_starts, np.uint64(te), "right")) - 1
-        if ri < 0 or (li == ri and int(self.leaf_ends[li]) < ts):
-            return {}, []                           # range between leaves
+        ri = int(np.searchsorted(starts, np.uint64(max(te, 0)),
+                                 "right")) - 1
+        if ri < 0 or (li == ri and int(ends[li]) < ts):
+            return plan, []                         # range between leaves
         # boundary leaves fully inside the range join the interior cover;
         # partially covered ones are queried with the exact time filter
         lo, hi = li, ri
         filtered = []
-        if not (ts <= int(self.leaf_starts[li])
-                and te >= int(self.leaf_ends[li])):
-            filtered.append(li)
+        if not (ts <= int(starts[li]) and te >= int(ends[li])):
+            filtered.append(base + li)
             lo = li + 1
-        if ri >= lo and not te >= int(self.leaf_ends[ri]):
+        if ri >= lo and not te >= int(ends[ri]):
             if ri != li:
-                filtered.append(ri)
+                filtered.append(base + ri)
             hi = ri - 1
-        plan: dict[int, list[int]] = {}
         theta = self.params.theta
         pos = lo
         while pos <= hi:
             lvl = 0
             blk = 1
-            # largest aligned, existing block starting at pos
-            while (pos % (blk * theta) == 0 and pos + blk * theta - 1 <= hi
+            # largest aligned, existing block starting at pos (global
+            # alignment == window alignment for all buildable levels)
+            while ((base + pos) % (blk * theta) == 0
+                   and pos + blk * theta - 1 <= hi
                    and lvl + 2 <= len(self.pools)
-                   and (pos // (blk * theta)) < self.pools[lvl + 1].n):
+                   and ((base + pos) // (blk * theta))
+                   < self.pools[lvl + 1].total):
                 blk *= theta
                 lvl += 1
-            plan.setdefault(lvl + 1, []).append(pos // blk)
+            plan.setdefault(lvl + 1, []).append((base + pos) // blk)
             pos += blk
         return plan, filtered
 
@@ -860,7 +1055,10 @@ class HiggsSketch(LegacyQueryMixin):
                 p.node_entry_bits(level)
             total_bits += len(rec["w"]) * ent
         total_bits += 64 * len(self.leaf_starts)    # B-tree keys
-        return total_bits / 8.0
+        # segment-record metadata (0.0 while the lifecycle is dormant,
+        # keeping the legacy accounting — and the CI exact baselines —
+        # bit-for-bit unchanged)
+        return total_bits / 8.0 + self.segments.space_bytes()
 
     def utilization(self) -> float:
         """Fraction of leaf-matrix entries occupied (paper Eq. 7)."""

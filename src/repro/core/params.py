@@ -24,6 +24,75 @@ def _env_flag(name: str, default: bool) -> bool:
 
 
 @dataclasses.dataclass(frozen=True)
+class RetentionPolicy:
+    """Temporal lifecycle policy for the sketch's segment store.
+
+    * ``none`` — the sketch grows monotonically (the original behavior).
+    * ``window(t_horizon)`` — sealed segments whose newest timestamp has
+      fallen more than ``t_horizon`` behind the newest closed leaf are
+      evicted wholesale (leaf slab, ancestor closure, overflow keys,
+      interval keys).  In-window answers are bit-identical to a fresh
+      sketch built over the retained suffix alone.
+    * ``budget(max_bytes)`` — whenever ``space_bytes()`` exceeds the
+      budget, the oldest fine segment is *coarsened* first (its leaves
+      and mid-level nodes collapse into the retained segment-root node,
+      so the range stays answerable at segment resolution, one-sided);
+      only when every old segment is already coarse are coarse roots
+      evicted, oldest first.
+    """
+
+    kind: str = "none"          # "none" | "window" | "budget"
+    t_horizon: int = 0          # window length in stream-timestamp units
+    max_bytes: float = 0.0      # resident-space budget (paper accounting)
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("none", "window", "budget"):
+            raise ValueError(f"retention kind must be 'none', 'window', "
+                             f"or 'budget', got {self.kind!r}")
+        if self.kind == "window" and self.t_horizon <= 0:
+            raise ValueError("window retention needs t_horizon > 0")
+        if self.kind == "budget" and self.max_bytes <= 0:
+            raise ValueError("budget retention needs max_bytes > 0")
+
+    @classmethod
+    def window(cls, t_horizon: int) -> "RetentionPolicy":
+        return cls(kind="window", t_horizon=int(t_horizon))
+
+    @classmethod
+    def budget(cls, max_bytes: float) -> "RetentionPolicy":
+        return cls(kind="budget", max_bytes=float(max_bytes))
+
+    @classmethod
+    def coerce(cls, value) -> "RetentionPolicy":
+        """Accepts a policy, a snapshot dict, or a string shorthand
+        (``"none"``, ``"window:3600"``, ``"budget:1048576"``) — the last
+        two so CLIs and env-driven configs can select a policy without
+        constructing the dataclass."""
+        if isinstance(value, cls):
+            return value
+        if value is None:
+            return cls()
+        if isinstance(value, dict):
+            return cls(**value)
+        if isinstance(value, str):
+            kind, _, arg = value.partition(":")
+            kind = kind.strip().lower()
+            if kind == "none":
+                return cls()
+            if kind == "window":
+                return cls.window(int(arg))
+            if kind == "budget":
+                return cls.budget(float(arg))
+            raise ValueError(f"cannot parse retention policy {value!r}")
+        raise TypeError(f"cannot coerce {type(value).__name__} "
+                        f"to RetentionPolicy")
+
+    @property
+    def active(self) -> bool:
+        return self.kind != "none"
+
+
+@dataclasses.dataclass(frozen=True)
 class HiggsParams:
     d1: int = 16            # leaf compressed-matrix side length (power of two)
     F1: int = 19            # leaf fingerprint length in bits
@@ -48,8 +117,21 @@ class HiggsParams:
     #                               "pallas" = sequential Alg.-1 kernel
     interpret: bool | None = None   # Pallas interpret mode; None = auto
     #                                 (compile on TPU, interpret elsewhere)
+    retention: RetentionPolicy = RetentionPolicy()
+    #                             # temporal lifecycle policy; accepts a
+    #                             # RetentionPolicy, a dict (snapshot
+    #                             # round trip), or a "window:3600" /
+    #                             # "budget:1e6" string shorthand
+    segment_levels: int = 2       # L: a sealed segment spans theta^L
+    #                             # leaves and owns its full ancestor
+    #                             # closure up to one level-(L+1) root;
+    #                             # only consulted when retention.active
 
     def __post_init__(self) -> None:
+        object.__setattr__(self, "retention",
+                           RetentionPolicy.coerce(self.retention))
+        if self.segment_levels < 1:
+            raise ValueError("segment_levels must be >= 1")
         if self.d1 & (self.d1 - 1):
             raise ValueError("d1 must be a power of two")
         root = round(math.sqrt(self.theta))
@@ -65,6 +147,11 @@ class HiggsParams:
             raise ValueError("the pallas insert backend requires use_ob "
                              "and batched_ingest (spills must go to "
                              "overflow blocks, not recursive leaves)")
+        if self.retention.active and self.segment_levels + 1 > self.max_levels:
+            raise ValueError(
+                f"segment_levels={self.segment_levels} needs "
+                f"{self.segment_levels + 1} tree levels but the "
+                f"fingerprint budget allows only {self.max_levels}")
 
     @property
     def R(self) -> int:

@@ -19,6 +19,7 @@ without fork the summary falls back to thread/sequential driving.
 
 Protocol (parent -> worker): ``("insert", {sid: (src, dst, w, t)})``
 (no ack — pipelined), ``("flush", None)``, ``("state", None)``,
+``("stats", None)`` (lifecycle counters only — no sketch state),
 ``("load", {sid: (arrays, meta)})``, ``("quit", None)``.  A worker that
 hits an exception remembers it and reports it at the next acked
 command, so ingestion errors surface at the flush/collect barrier
@@ -68,6 +69,15 @@ def _worker_main(conn, params_kw: dict, shard_ids: list[int]) -> None:
             elif cmd == "state":
                 if failure is None:
                     reply = ("ok", {s: sk.state_dict()
+                                    for s, sk in sketches.items()})
+                else:
+                    reply = ("err", failure)
+            elif cmd == "stats":
+                # lifecycle counters only: a few ints per shard, so
+                # telemetry readers (the pipeline's per-batch
+                # on_retention hook) never pay the full-state barrier
+                if failure is None:
+                    reply = ("ok", {s: sk.retention_stats()
                                     for s, sk in sketches.items()})
                 else:
                     reply = ("err", failure)
@@ -181,6 +191,17 @@ class ShardProcessEngine:
         for conn in self._conns:
             states.update(self._ack(conn))
         return states
+
+    def stats(self) -> dict:
+        """Cheap barrier: ``{shard_id: retention_stats dict}`` without
+        shipping any sketch state (pending inserts still drain first —
+        FIFO pipes — so the counters are current)."""
+        for conn in self._conns:
+            conn.send(("stats", None))
+        out: dict = {}
+        for conn in self._conns:
+            out.update(self._ack(conn))
+        return out
 
     def _load(self, states: dict) -> None:
         for wi, payload in enumerate(self._per_worker(states)):

@@ -19,6 +19,9 @@ to an unsharded sketch).
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
+
 import numpy as np
 
 from repro.core import hashing
@@ -62,6 +65,70 @@ def partition_batch(src, dst, w, t, n_shards: int, seed: int):
         idx = order[bounds[s]:bounds[s + 1]]
         parts.append((src[idx], dst[idx], w[idx], t[idx]))
     return sids, parts
+
+
+@dataclasses.dataclass
+class PartitionStats:
+    """Per-batch shard-load telemetry (``QueryStats``-style counters).
+
+    Source partitioning is hostage to per-source skew — the PR 4 caveat:
+    one hot Lkml sender owns 53% of the stream's edges, so a shard fleet
+    ingesting that stream serializes on the hot shard no matter how many
+    workers it has.  ``record`` keeps cheap aggregate counters (total
+    items routed per shard, the hottest single-batch share, how many
+    batches were skewed) and warns **once** when any single shard
+    receives more than half a batch, so the operator learns about the
+    skew at ingest time instead of from a flat speedup curve.
+    """
+
+    HOT_SHARE = 0.5
+
+    n_shards: int = 0
+    batches: int = 0
+    items: int = 0
+    hot_batches: int = 0        # batches where one shard got > HOT_SHARE
+    max_share: float = 0.0      # hottest single-shard share of any batch
+    per_shard_items: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros((0,), np.int64))
+    _warned: bool = dataclasses.field(default=False, repr=False)
+
+    def record(self, counts: np.ndarray) -> None:
+        """Fold one batch's per-shard item counts into the counters."""
+        counts = np.asarray(counts, np.int64)
+        if len(self.per_shard_items) != len(counts):
+            self.n_shards = len(counts)
+            self.per_shard_items = np.zeros((len(counts),), np.int64)
+        total = int(counts.sum())
+        if total == 0:
+            return
+        self.batches += 1
+        self.items += total
+        self.per_shard_items += counts
+        share = float(counts.max()) / total
+        self.max_share = max(self.max_share, share)
+        if share > self.HOT_SHARE and self.n_shards > 1:
+            self.hot_batches += 1
+            if not self._warned:
+                self._warned = True
+                hot = int(counts.argmax())
+                warnings.warn(
+                    f"shard skew: shard {hot} received {share:.0%} of a "
+                    f"{total}-item batch (> {self.HOT_SHARE:.0%}); "
+                    f"source-partitioned ingestion serializes on hot "
+                    f"senders (see the PR 4 Lkml caveat) — consider "
+                    f"re-keying or hot-key splitting", RuntimeWarning,
+                    stacklevel=3)
+
+    def summary(self) -> str:
+        """One-line human-readable skew report."""
+        if self.items == 0:
+            return "partition: no items routed"
+        shares = self.per_shard_items / max(self.items, 1)
+        return (f"partition: {self.items} items over {self.batches} "
+                f"batches, per-shard share "
+                f"[{', '.join(f'{s:.1%}' for s in shares)}], "
+                f"hottest batch share {self.max_share:.1%}, "
+                f"{self.hot_batches} skewed batch(es)")
 
 
 class DstShardMap:

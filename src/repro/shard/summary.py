@@ -32,6 +32,16 @@ registry, benchmarks, stream pipeline, and persistence layers
 unchanged; ``state_dict``/``load_state`` nest per-shard manifests so
 ``StreamPipeline.run_resumable`` and ``repro.api.restore_summary``
 work without modification.
+
+Temporal lifecycle: a shared :class:`~repro.core.params.RetentionPolicy`
+(``retention=...``) propagates to every shard — worker processes
+included — and each shard enforces it on its own sub-stream.  Because
+eviction/coarsening is a deterministic function of the closed-leaf
+sequence alone, per-shard state under retention stays bit-identical to
+an independently built single sketch over the same partition, which is
+the same contract the ingestion engine already guarantees.  Per-batch
+shard load is tracked in :class:`~repro.shard.partition.PartitionStats`
+(``.partition_stats``) with a one-time hot-shard warning.
 """
 from __future__ import annotations
 
@@ -47,7 +57,8 @@ from repro.api.queries import QueryBatch, QueryResult
 from repro.core.higgs import HiggsSketch
 from repro.core.params import HiggsParams
 from repro.shard.engine import ShardProcessEngine, fork_available
-from repro.shard.partition import DstShardMap, partition_batch
+from repro.shard.partition import (DstShardMap, PartitionStats,
+                                   partition_batch)
 from repro.shard.planner import ShardedQueryPlanner
 
 _PARALLEL_MODES = ("auto", "process", "threads", "none")
@@ -84,6 +95,7 @@ class ShardedHiggs(LegacyQueryMixin):
         # make query coordinates computable once for the whole fleet
         self._shards = [HiggsSketch(params) for _ in range(self.n_shards)]
         self.dst_map = DstShardMap(self.n_shards, params.seed)
+        self.partition_stats = PartitionStats(n_shards=self.n_shards)
         self.planner = ShardedQueryPlanner(self)
         self.mesh = None
         if self.n_shards > 1:
@@ -215,6 +227,8 @@ class ShardedHiggs(LegacyQueryMixin):
         drain through the resolved parallel mode."""
         sids, parts = partition_batch(src, dst, w, t, self.n_shards,
                                       self.params.seed)
+        self.partition_stats.record(
+            np.bincount(sids, minlength=self.n_shards))
         self.dst_map.update(np.asarray(dst, np.uint32), sids)
         if self._mode == "process":
             self._get_engine().insert(
@@ -279,6 +293,29 @@ class ShardedHiggs(LegacyQueryMixin):
             return 0.0
         return float(sum(sh.utilization() * n
                          for sh, n in zip(self.shards, ns)) / sum(ns))
+
+    def retention_stats(self) -> dict:
+        """Fleet lifecycle telemetry: per-shard counters summed (each
+        shard enforces the shared :class:`RetentionPolicy` on its own
+        sub-stream, bit-deterministically), plus the fleet space total.
+
+        In process mode this is deliberately *not* a full read barrier:
+        workers answer a counters-only ``stats`` command (a few ints per
+        shard), so the pipeline's per-batch ``on_retention`` hook never
+        serializes the whole fleet state just to chart a plateau."""
+        if self._engine is not None and self._stale:
+            per = list(self._engine.stats().values())
+            space = sum(p["space_bytes"] for p in per) \
+                + self.dst_map.space_bytes()
+        else:
+            per = [sh.retention_stats() for sh in self._shards]
+            space = self.space_bytes()
+        out = {"policy": self.params.retention.kind,
+               "space_bytes": float(space)}
+        for key in ("segments_retained", "segments_coarse",
+                    "segments_evicted", "items_evicted", "items_coarsened"):
+            out[key] = sum(p[key] for p in per)
+        return out
 
     # ------------------------------------------------------------------
     # persistence: nested per-shard manifests

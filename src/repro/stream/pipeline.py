@@ -41,7 +41,9 @@ class StreamPipeline:
 
     def feed(self, sketch: "GraphSummary",
              progress: Callable[[int], None] | None = None,
-             flush: bool = True, align: bool = True) -> None:
+             flush: bool = True, align: bool = True,
+             on_retention: Callable[[int, dict], None] | None = None
+             ) -> None:
         """Feed every remaining batch into any ``GraphSummary``.
 
         With ``align`` (default), the batch size is rounded to a whole
@@ -50,14 +52,27 @@ class StreamPipeline:
         leaves — one multi-leaf drain per call, no partial-leaf carry.
         The final sketch is identical either way (leaf boundaries depend
         only on the item sequence); alignment just batches better.
+
+        ``on_retention(cursor, stats)`` is the temporal-lifecycle hook:
+        after each batch it receives the sketch's ``retention_stats()``
+        (eviction/coarsening counters, resident bytes), so callers can
+        chart memory plateaus or alert on unexpected eviction without
+        polling the sketch themselves.  Ignored for summaries that have
+        no lifecycle (no ``retention_stats`` attribute).
         """
         batch = self._aligned_batch(sketch, align)
+        stats_fn = getattr(sketch, "retention_stats", None) \
+            if on_retention is not None else None
         for b in self._iter_batches(batch):
             sketch.insert(*b)
             if progress:
                 progress(self.cursor)
+            if stats_fn is not None:
+                on_retention(self.cursor, stats_fn())
         if flush:
             sketch.flush()
+            if stats_fn is not None:
+                on_retention(self.cursor, stats_fn())
 
     def feed_summary(self, name: str,
                      progress: Callable[[int], None] | None = None,
@@ -150,10 +165,15 @@ class StreamPipeline:
                       flush: bool = True, align: bool = True,
                       should_stop: Callable[[], bool] | None = None,
                       keep: int | None = None,
-                      resume: bool = True) -> "GraphSummary":
+                      resume: bool = True,
+                      on_retention: Callable[[int, dict], None] | None = None
+                      ) -> "GraphSummary":
         """Crash-consistent :meth:`feed`: snapshot sketch + cursor every
         ``every`` batches, resuming from the newest snapshot if one
-        exists.
+        exists.  Lifecycle state (segment records, eviction counters,
+        window bases) rides inside the sketch's own ``state_dict``, so a
+        resumed run continues retention bit-identically; ``on_retention``
+        is the same per-batch hook as :meth:`feed`.
 
         Because each snapshot captures the sketch's *entire* state —
         including the pending not-yet-a-leaf buffer — a killed run
@@ -171,12 +191,16 @@ class StreamPipeline:
         if resume and latest_step(ckpt_dir) is not None:
             self.restore_snapshot(sketch, ckpt_dir)
         batch = self._aligned_batch(sketch, align)
+        stats_fn = getattr(sketch, "retention_stats", None) \
+            if on_retention is not None else None
         done = 0
         for b in self._iter_batches(batch):
             sketch.insert(*b)
             done += 1
             if progress:
                 progress(self.cursor)
+            if stats_fn is not None:
+                on_retention(self.cursor, stats_fn())
             if done % every == 0:
                 self.snapshot(sketch, ckpt_dir)
                 if keep:
@@ -187,6 +211,10 @@ class StreamPipeline:
                 return sketch
         if flush:
             sketch.flush()
+            if stats_fn is not None:
+                # flush can seal + evict; the hook must see the final
+                # lifecycle state, exactly as feed() reports it
+                on_retention(self.cursor, stats_fn())
         # final snapshot holds the flushed sketch at cursor == len(self),
         # so a restart of a completed run restores and immediately returns
         self.snapshot(sketch, ckpt_dir)

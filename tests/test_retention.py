@@ -1,0 +1,435 @@
+"""Bounded-memory temporal lifecycle (PR 5): segment store, retention
+policies, coarsening compaction, and their invariants.
+
+The two load-bearing properties (hypothesis-driven):
+
+(a) **Eviction never changes an in-window answer** — a windowed sketch
+    that has evicted a prefix of segments is bit-identical, in both
+    retained structure and every query answer, to a fresh sketch built
+    from the retained suffix of the stream alone.
+(b) **Windowed snapshots round-trip** — ``restore_summary`` rebuilds a
+    mid-lifecycle sketch (evictions applied, window bases set)
+    bit-identically, including under ``higgs-sharded``, and the restored
+    sketch continues ingesting + evicting exactly like the original.
+"""
+import numpy as np
+import pytest
+
+try:        # optional dev dependency; the deterministic tests run without
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # pragma: no cover - env dependent
+    HAVE_HYPOTHESIS = False
+
+from repro.api import (EdgeQuery, PathQuery, SubgraphQuery, VertexQuery,
+                       make_summary, restore_summary)
+from repro.core.higgs import HiggsSketch
+from repro.core.oracle import ExactOracle
+from repro.core.params import HiggsParams, RetentionPolicy
+
+# collision-prone small geometry; segment_levels=1 => 4-leaf segments,
+# so modest streams seal and evict many segments
+WKW = dict(d1=4, F1=14, b=2, r=2, segment_levels=1)
+
+
+def make_stream(n, nv, t_max, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, nv, n).astype(np.uint32)
+    dst = rng.integers(0, nv, n).astype(np.uint32)
+    w = rng.integers(1, 10, n).astype(np.float32)
+    t = np.sort(rng.integers(0, t_max, n).astype(np.uint32))
+    return src, dst, w, t
+
+
+def query_batch(stream, t_max, qseed=0):
+    rng = np.random.default_rng(qseed)
+    src, dst = stream[0], stream[1]
+    ranges = [(0, t_max)] + [
+        tuple(sorted(rng.integers(0, t_max + 1, 2).tolist()))
+        for _ in range(4)]
+    out = []
+    for ts, te in ranges:
+        out += [
+            EdgeQuery(src[-32:], dst[-32:], ts, te),
+            VertexQuery(src[-16:], ts, te, "out"),
+            VertexQuery(dst[-16:], ts, te, "in"),
+            PathQuery([int(src[-1]), int(dst[-1]), int(dst[-2])], ts, te),
+            SubgraphQuery([(int(src[-3]), int(dst[-3])),
+                           (int(src[-4]), int(dst[-4]))], ts, te),
+        ]
+    return out
+
+
+def assert_same_answers(a, b, queries, tag=""):
+    va = a.query(queries).values
+    vb = b.query(queries).values
+    for i, (x, y) in enumerate(zip(va, vb)):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), (tag, i)
+
+
+def assert_retained_structure_equal(win: HiggsSketch, other: HiggsSketch,
+                                    same_base: bool = False):
+    """The windowed sketch's physical (retained) storage must equal the
+    other build's, level by level — not just the answers.  A fresh
+    suffix build carries zero window bases; a snapshot restore
+    (``same_base=True``) must reproduce them exactly."""
+    np.testing.assert_array_equal(win.leaf_starts, other.leaf_starts)
+    np.testing.assert_array_equal(win.leaf_ends, other.leaf_ends)
+    assert len(win.pools) == len(other.pools)
+    for pw, pf in zip(win.pools, other.pools):
+        assert pw.n == pf.n
+        assert pf.base == (pw.base if same_base else 0)
+        for name in (pw.arrs or {}):
+            assert np.array_equal(pw.arrs[name][:pw.n],
+                                  pf.arrs[name][:pf.n]), name
+
+
+def check_window_bit_identity(seed: int, n: int, frac: int) -> None:
+    """Property (a) body: the windowed sketch == fresh sketch over the
+    retained suffix, in structure and in every (even out-of-window)
+    query answer."""
+    t_max = 4000
+    stream = make_stream(n, 48, t_max, seed)
+    params = HiggsParams(
+        retention=RetentionPolicy.window(t_max // frac), **WKW)
+    win = HiggsSketch(params)
+    win.insert(*stream)
+    win.flush()
+    drop = win.segments.items_dropped
+    fresh = HiggsSketch(params)
+    fresh.insert(*(a[drop:] for a in stream))
+    fresh.flush()
+    assert_retained_structure_equal(win, fresh)
+    assert_same_answers(win, fresh, query_batch(stream, t_max, seed),
+                        tag="window-vs-fresh")
+    assert win.space_bytes() == fresh.space_bytes()
+
+
+class TestWindowBitIdentity:
+    @pytest.mark.parametrize("seed,n,frac",
+                             [(0, 400, 3), (1, 883, 4), (2, 251, 6),
+                              (42, 617, 4)])
+    def test_eviction_matches_fresh_suffix_build(self, seed, n, frac):
+        check_window_bit_identity(seed, n, frac)
+
+    def test_eviction_is_batching_invariant(self):
+        """Lifecycle decisions are a function of the item sequence, not
+        of how ``insert`` batched it."""
+        t_max = 3000
+        stream = make_stream(700, 32, t_max, seed=7)
+        params = HiggsParams(
+            retention=RetentionPolicy.window(800), **WKW)
+        whole = HiggsSketch(params)
+        whole.insert(*stream)
+        whole.flush()
+        chunked = HiggsSketch(params)
+        for s in range(0, 700, 93):
+            chunked.insert(*(a[s:s + 93] for a in stream))
+        chunked.flush()
+        np.testing.assert_array_equal(whole.leaf_starts,
+                                      chunked.leaf_starts)
+        assert whole.retention_stats() == chunked.retention_stats()
+        assert_same_answers(whole, chunked,
+                            query_batch(stream, t_max), tag="batching")
+
+    def test_space_plateaus_over_many_windows(self):
+        """Acceptance bar: >= 10 windows stream through; resident bytes
+        stay within +/-20% of the 2-window footprint."""
+        n, t_max = 4000, 20_000
+        stream = make_stream(n, 64, t_max, seed=3)
+        horizon = t_max // 10
+        sk = HiggsSketch(HiggsParams(
+            retention=RetentionPolicy.window(horizon), **WKW))
+        series = []
+        step = n // 10
+        for s in range(0, n, step):
+            sk.insert(*(a[s:s + step] for a in stream))
+            series.append(sk.space_bytes())
+        ref = series[1]
+        for sb in series[2:]:
+            assert abs(sb - ref) <= 0.2 * ref, (series, ref)
+        stats = sk.retention_stats()
+        assert stats["segments_evicted"] > 0
+        assert stats["items_evicted"] > 0
+
+
+def check_window_roundtrip(seed: int) -> None:
+    """Property (b) body: a mid-lifecycle snapshot restores
+    bit-identically and the restored sketch keeps ingesting + evicting
+    in lockstep with the original."""
+    import tempfile
+    t_max = 3000
+    stream = make_stream(600, 40, t_max, seed)
+    sk = make_summary("higgs", retention="window:700", **WKW)
+    sk.insert(*stream)             # no flush: pending buffer snapshots
+    with tempfile.TemporaryDirectory() as d:
+        sk.save(d, 1)
+        got = restore_summary(d)
+    assert isinstance(got, HiggsSketch)
+    assert got.params.retention == sk.params.retention
+    assert got.retention_stats() == sk.retention_stats()
+    assert_retained_structure_equal(sk, got, same_base=True)
+    assert_same_answers(sk, got, query_batch(stream, t_max, seed),
+                        tag="restore")
+    # future inserts must evict identically (t_last, tail counts and
+    # window bases all restored)
+    extra = make_stream(400, 40, t_max, seed ^ 0xABCDEF)
+    extra = (extra[0], extra[1], extra[2], extra[3] + np.uint32(t_max))
+    sk.insert(*extra)
+    got.insert(*extra)
+    sk.flush()
+    got.flush()
+    assert got.retention_stats() == sk.retention_stats()
+    assert_retained_structure_equal(sk, got, same_base=True)
+    assert_same_answers(sk, got, query_batch(extra, 2 * t_max, seed),
+                        tag="restore+insert")
+
+
+if HAVE_HYPOTHESIS:
+    class TestRetentionProperties:
+        """The hypothesis drivers for properties (a) and (b)."""
+
+        @given(st.integers(0, 2**31 - 1), st.integers(200, 900),
+               st.sampled_from([3, 4, 6]))
+        @settings(max_examples=15, deadline=None)
+        def test_eviction_matches_fresh_suffix_build(self, seed, n, frac):
+            check_window_bit_identity(seed, n, frac)
+
+        @given(st.integers(0, 2**31 - 1))
+        @settings(max_examples=10, deadline=None)
+        def test_windowed_snapshot_roundtrip(self, seed):
+            check_window_roundtrip(seed)
+
+
+class TestWindowSnapshotRoundTrip:
+    @pytest.mark.parametrize("seed", [0, 7, 1234])
+    def test_restore_summary_roundtrip_and_future_evictions(self, seed):
+        check_window_roundtrip(seed)
+
+    # two shards over a 64-vertex stream legitimately skew past 50%;
+    # the telemetry warning is exercised on purpose in its own test
+    @pytest.mark.filterwarnings("ignore:shard skew:RuntimeWarning")
+    def test_sharded_windowed_roundtrip(self, tmp_path):
+        """Retention propagates to every shard and the whole windowed
+        fleet round-trips through ``restore_summary``."""
+        t_max = 3000
+        stream = make_stream(1500, 64, t_max, seed=11)
+        fleet = make_summary("higgs-sharded", shards=2, parallel="none",
+                             retention="window:800", **WKW)
+        fleet.insert(*stream)
+        fleet.flush()
+        stats = fleet.retention_stats()
+        assert stats["policy"] == "window"
+        assert stats["segments_evicted"] > 0
+        # per-shard eviction is bit-deterministic: each shard equals an
+        # independently built sketch over its own sub-stream
+        from repro.shard.partition import partition_batch
+        _, parts = partition_batch(*stream, 2, fleet.params.seed)
+        for s, sh in enumerate(fleet.shards):
+            solo = HiggsSketch(fleet.params)
+            solo.insert(*parts[s])
+            solo.flush()
+            np.testing.assert_array_equal(sh.leaf_starts, solo.leaf_starts)
+            assert sh.retention_stats() == solo.retention_stats()
+        fleet.save(str(tmp_path), 5)
+        got = restore_summary(str(tmp_path))
+        assert got.retention_stats() == stats
+        assert_same_answers(fleet, got, query_batch(stream, t_max),
+                            tag="sharded-restore")
+        fleet.close()
+        got.close()
+
+
+class TestBudgetCoarsening:
+    def test_budget_is_enforced_and_one_sided(self):
+        """Coarsened ranges stay answerable (never underestimate), and
+        the footprint respects the configured budget."""
+        t_max = 6000
+        stream = make_stream(3000, 40, t_max, seed=5)
+        ora = ExactOracle()
+        ora.insert(*stream)
+        budget = 60_000.0
+        sk = HiggsSketch(HiggsParams(
+            retention=RetentionPolicy.budget(budget), d1=4, F1=20, b=2,
+            r=2, segment_levels=1))
+        sk.insert(*stream)
+        sk.flush()
+        stats = sk.retention_stats()
+        assert sk.space_bytes() <= budget
+        assert stats["segments_coarse"] > 0
+        rng = np.random.default_rng(6)
+        for ts, te in [(0, t_max), (0, 500), (1000, 2500), (4000, 6000)]:
+            qs = rng.integers(0, 40, 48).astype(np.uint32)
+            qd = rng.integers(0, 40, 48).astype(np.uint32)
+            est = sk.edge_query(qs, qd, ts, te)
+            true = ora.edge_query(qs, qd, ts, te)
+            assert (est >= true - 1e-4).all(), (ts, te)
+            for direction in ("out", "in"):
+                ev = sk.vertex_query(qs[:16], ts, te, direction)
+                tv = ora.vertex_query(qs[:16], ts, te, direction)
+                assert (ev >= tv - 1e-4).all(), (ts, te, direction)
+
+    def test_coarsening_conserves_total_mass(self):
+        """With a budget loose enough to only coarsen (never evict),
+        full-range out-mass still equals the exact stream weight: the
+        segment root holds its whole subtree's mass."""
+        t_max = 5000
+        stream = make_stream(2500, 32, t_max, seed=9)
+        sk = HiggsSketch(HiggsParams(
+            retention=RetentionPolicy.budget(50_000), d1=4, F1=20, b=2,
+            r=2, segment_levels=1))
+        sk.insert(*stream)
+        sk.flush()
+        stats = sk.retention_stats()
+        assert stats["segments_coarse"] > 0
+        assert stats["segments_evicted"] == 0
+        qv = np.arange(32, dtype=np.uint32)
+        est = sk.vertex_query(qv, 0, t_max, "out").sum()
+        total = stream[2].sum()
+        assert est >= total - 1e-3
+        assert est <= total * 1.01 + 1e-3
+
+    def test_budget_snapshot_roundtrip(self, tmp_path):
+        t_max = 5000
+        stream = make_stream(2500, 32, t_max, seed=13)
+        sk = make_summary("higgs", retention="budget:45000", d1=4, F1=20,
+                          b=2, r=2, segment_levels=1)
+        sk.insert(*stream)
+        sk.flush()
+        assert sk.retention_stats()["segments_coarse"] > 0
+        sk.save(str(tmp_path), 0)
+        got = restore_summary(str(tmp_path))
+        assert got.retention_stats() == sk.retention_stats()
+        assert_same_answers(sk, got, query_batch(stream, t_max),
+                            tag="budget-restore")
+
+
+class TestBoundarySearchWindowed:
+    def test_cover_partitions_retained_leaves(self):
+        """Adapted from the core invariant: the plan covers every
+        retained fine leaf overlapping the range exactly once (global
+        ids), and every overlapping coarse segment contributes its root."""
+        t_max = 8000
+        stream = make_stream(3000, 48, t_max, seed=17)
+        sk = HiggsSketch(HiggsParams(
+            retention=RetentionPolicy.budget(70_000), d1=4, F1=20, b=2,
+            r=2, segment_levels=2))
+        sk.insert(*stream)
+        sk.flush()
+        st_ = sk.segments
+        assert st_.n_coarse > 0, "test premise: some coarse segments"
+        theta = sk.params.theta
+        base = st_.fine_base_leaf
+        root_span = theta ** st_.levels
+        rng = np.random.default_rng(18)
+        for _ in range(40):
+            ts, te = sorted(rng.integers(0, t_max, 2).tolist())
+            plan, filtered = sk.boundary_search(ts, te)
+            covered = set(filtered)
+            for level, ids in plan.items():
+                span = theta ** (level - 1)
+                for u in ids:
+                    leaves = set(range(u * span, (u + 1) * span))
+                    assert not (leaves & covered), "double counted"
+                    covered |= leaves
+            # coarse roots: exactly the overlapping coarse segments
+            for i, rec in enumerate(st_.records[:st_.n_coarse]):
+                rid = st_.n_evicted + i
+                root_leaves = set(range(rid * root_span,
+                                        (rid + 1) * root_span))
+                if rec.overlaps(ts, te):
+                    assert root_leaves <= covered, f"coarse seg {i} missing"
+                else:
+                    assert not (root_leaves & covered)
+            # retained fine leaves: covered iff overlapping
+            for i in range(len(sk.leaf_starts)):
+                s, e = int(sk.leaf_starts[i]), int(sk.leaf_ends[i])
+                gid = base + i
+                if not (e < ts or s > te):
+                    assert gid in covered, f"fine leaf {gid} missing"
+                elif gid in covered:
+                    assert gid in filtered
+
+    def test_plan_ids_are_retained(self):
+        """Every plan id must be gatherable: >= the pool's window base."""
+        t_max = 4000
+        stream = make_stream(1500, 32, t_max, seed=19)
+        sk = HiggsSketch(HiggsParams(
+            retention=RetentionPolicy.window(900), **WKW))
+        sk.insert(*stream)
+        sk.flush()
+        assert sk.segments.n_evicted > 0
+        plan, filtered = sk.boundary_search(0, t_max)
+        for level, ids in plan.items():
+            pool = sk.pools[level - 1]
+            assert all(pool.base <= u < pool.total for u in ids), level
+        pool = sk.pools[0]
+        assert all(pool.base <= u < pool.total for u in filtered)
+
+
+class TestPolicyConfig:
+    def test_coercion_forms(self):
+        assert HiggsParams(retention="window:100").retention == \
+            RetentionPolicy.window(100)
+        assert HiggsParams(retention={"kind": "budget",
+                                      "max_bytes": 5e5}).retention == \
+            RetentionPolicy.budget(5e5)
+        assert not HiggsParams().retention.active
+
+    def test_invalid_policies_raise(self):
+        with pytest.raises(ValueError):
+            RetentionPolicy("window")              # no horizon
+        with pytest.raises(ValueError):
+            RetentionPolicy("budget")              # no budget
+        with pytest.raises(ValueError):
+            RetentionPolicy.coerce("sliding:10")
+        with pytest.raises(ValueError):
+            # segment roots would need more levels than the fingerprint
+            # budget allows
+            HiggsParams(d1=4, F1=3, retention="window:10",
+                        segment_levels=4)
+
+    def test_none_policy_never_mutates_storage(self):
+        stream = make_stream(900, 32, 2000, seed=21)
+        sk = HiggsSketch(HiggsParams(**WKW))
+        sk.insert(*stream)
+        sk.flush()
+        assert sk.segments.records == []
+        assert all(p.base == 0 for p in sk.pools)
+        assert sk.retention_stats()["segments_evicted"] == 0
+
+
+class TestShardSkewTelemetry:
+    def test_hot_shard_warns_once_and_counts(self):
+        fleet = make_summary("higgs-sharded", shards=4, parallel="none",
+                             **WKW)
+        hot = np.full(500, 7, np.uint32)           # one hot source vertex
+        dst = np.arange(500, dtype=np.uint32)
+        w = np.ones(500, np.float32)
+        t = np.arange(500, dtype=np.uint32)
+        with pytest.warns(RuntimeWarning, match="shard skew"):
+            fleet.insert(hot, dst, w, t)
+        import warnings as _w
+        with _w.catch_warnings():
+            _w.simplefilter("error")               # second batch: silent
+            fleet.insert(hot, dst, w, t + np.uint32(500))
+        ps = fleet.partition_stats
+        assert ps.items == 1000
+        assert ps.batches == 2
+        assert ps.hot_batches == 2
+        assert ps.max_share == 1.0
+        assert ps.per_shard_items.sum() == 1000
+        assert "hottest batch share 100.0%" in ps.summary()
+        fleet.close()
+
+    def test_balanced_stream_no_warning(self):
+        fleet = make_summary("higgs-sharded", shards=4, parallel="none",
+                             **WKW)
+        stream = make_stream(2000, 1000, 1000, seed=23)
+        import warnings as _w
+        with _w.catch_warnings():
+            _w.simplefilter("error", RuntimeWarning)
+            fleet.insert(*stream)
+        assert fleet.partition_stats.hot_batches == 0
+        assert fleet.partition_stats.max_share < 0.5
+        fleet.close()
