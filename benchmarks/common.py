@@ -29,6 +29,9 @@ METRICS: dict[str, dict] = {}
 
 
 def record(name: str, value: float, kind: str = "info") -> None:
+    if kind not in ("floor", "exact", "info"):
+        raise ValueError(f"metric {name!r}: unknown kind {kind!r} "
+                         f"(want 'floor', 'exact' or 'info')")
     METRICS[name] = {"value": float(value), "kind": kind}
 
 
@@ -43,8 +46,10 @@ def write_json(path: str) -> None:
         },
         "metrics": METRICS,
     }
-    with open(path, "w") as fh:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
         json.dump(payload, fh, indent=2, sort_keys=True)
+    os.replace(tmp, path)
     print(f"wrote {path} ({len(METRICS)} metrics)")
 
 # registry kwargs for the benchmark-default configurations

@@ -33,17 +33,54 @@ import math
 import sys
 
 
+class SchemaError(ValueError):
+    """A results/baseline JSON does not have the expected shape."""
+
+
+def _metric_value(entry, name: str, origin: str) -> float:
+    """Extract ``entry["value"]`` with a schema-drift diagnostic instead
+    of an opaque ``KeyError``/``TypeError`` (the failure mode when a
+    benchmark changes its output shape but the baseline — or the gate —
+    lags behind)."""
+    if not isinstance(entry, dict) or "value" not in entry:
+        raise SchemaError(
+            f"{origin}: metric {name!r} has no 'value' field (got "
+            f"{entry!r}); expected {{'value': float, 'kind': ...}} — "
+            f"regenerate the file with the current benchmarks")
+    try:
+        return float(entry["value"])
+    except (TypeError, ValueError):
+        raise SchemaError(
+            f"{origin}: metric {name!r} has non-numeric value "
+            f"{entry['value']!r}") from None
+
+
 def compare(measured: dict, baseline: dict, tolerance: float) -> list[str]:
-    """Returns a list of human-readable failures (empty = gate passes)."""
+    """Returns a list of human-readable failures (empty = gate passes).
+
+    Raises :class:`SchemaError` when either file's shape is wrong —
+    schema drift must fail the gate loudly, not pass vacuously or
+    crash with a bare ``KeyError``.
+    """
     failures: list[str] = []
-    got = measured.get("metrics", {})
-    for name, spec in sorted(baseline.get("metrics", {}).items()):
-        kind = spec.get("kind", "info")
-        base = float(spec["value"])
+    base_metrics = baseline.get("metrics")
+    if not isinstance(base_metrics, dict) or not base_metrics:
+        raise SchemaError(
+            "baseline has no 'metrics' mapping (or it is empty) — an "
+            "empty gate would pass vacuously; regenerate the baseline "
+            "with benchmarks.throughput")
+    got = measured.get("metrics")
+    if not isinstance(got, dict):
+        raise SchemaError(
+            "measured results have no 'metrics' mapping — the "
+            "benchmark run did not produce gateable output")
+    for name, spec in sorted(base_metrics.items()):
+        kind = spec.get("kind", "info") if isinstance(spec, dict) else "info"
+        base = _metric_value(spec, name, "baseline")
         if name not in got:
             failures.append(f"{name}: missing from measured results")
             continue
-        val = float(got[name]["value"])
+        val = _metric_value(got[name], name, "measured results")
         if kind == "floor":
             floor = base * (1.0 - tolerance)
             if val < floor:
@@ -70,7 +107,11 @@ def main(argv=None) -> int:
         measured = json.load(fh)
     with open(args.baseline) as fh:
         baseline = json.load(fh)
-    failures = compare(measured, baseline, args.tolerance)
+    try:
+        failures = compare(measured, baseline, args.tolerance)
+    except SchemaError as e:
+        print(f"perf gate ERROR: {e}", file=sys.stderr)
+        return 2
     n = len(baseline.get("metrics", {}))
     if failures:
         print(f"perf gate FAILED ({len(failures)}/{n} metrics):")

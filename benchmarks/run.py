@@ -23,7 +23,10 @@ def main() -> None:
                             param_sweep, roofline, space, throughput)
 
     scale = 0.25 if args.fast else 1.0
-    n = lambda base: max(int(base * scale), 20_000)
+
+    def n(base):
+        return max(int(base * scale), 20_000)
+
     suites = {
         "accuracy": lambda: accuracy.run(n_edges=n(120_000)),
         "latency": lambda: latency.run(n_edges=n(120_000)),

@@ -1,0 +1,23 @@
+"""Correctness tooling for the HIGGS repro: static invariant analysis
+("higgslint") plus the ``HIGGS_SANITIZE=1`` runtime sanitizer.
+
+The repo's guarantees (tight error bounds, bit-deterministic retention
+and sharding, crash-atomic snapshots) hold only because the codebase
+maintains strict cross-layer invariants.  This package enforces them:
+
+* :mod:`repro.analysis.lint` — AST-based linter with repo-specific
+  rules R1-R6 (``python -m repro.analysis.lint src benchmarks``);
+* :mod:`repro.analysis.rules` — the rule implementations;
+* :mod:`repro.analysis.config` — path scoping + suppression baseline;
+* :mod:`repro.analysis.report` — file:line reporting and the committed
+  suppression baseline;
+* :mod:`repro.analysis.sanitize` — drain-barrier structural assertions
+  enabled by ``HIGGS_SANITIZE=1`` (cheap enough for tier-1 CI).
+
+See docs/API.md "Invariants & static analysis" for the rule catalog
+and the suppression workflow.
+"""
+from repro.analysis.config import LintConfig
+from repro.analysis.walker import Finding, lint_paths
+
+__all__ = ["Finding", "LintConfig", "lint_paths"]

@@ -1,0 +1,59 @@
+"""Scoping configuration for higgslint.
+
+Each rule applies to a subset of the tree; the subsets are expressed as
+path *fragments* matched against the analyzed file's normalized
+(posix, repo-relative) path.  A fragment matches when the path starts
+with it or contains it — so ``"src/repro/core/"`` scopes a directory
+and ``"stream/pipeline.py"`` scopes one file regardless of how the
+caller spelled the root.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+#: default committed suppression baseline, resolved against the cwd
+#: (CI and developers run the linter from the repo root)
+DEFAULT_BASELINE = "higgslint-baseline.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class LintConfig:
+    # R1: paths whose code feeds retention/partition decisions — full
+    # determinism discipline (wall-clock + set-iteration bans on top of
+    # the everywhere unseeded-RNG ban)
+    determinism_paths: tuple[str, ...] = (
+        "src/repro/core/",
+        "src/repro/shard/",
+        "src/repro/stream/pipeline.py",
+    )
+    # R2: classes that own level-pool slabs and may index them directly
+    pool_owner_classes: tuple[str, ...] = ("_LevelPool",)
+    # R4: the atomic-write helpers themselves (tmp + os.replace lives
+    # here; everything else must route through them or use the idiom)
+    atomic_write_exempt: tuple[str, ...] = (
+        "src/repro/checkpoint/store.py",
+    )
+    # R5: files holding structure-bearing mutations guarded by
+    # ``structure_version``
+    structure_files: tuple[str, ...] = ("src/repro/core/higgs.py",)
+    # R6: accelerator kernel modules (jitted / pallas bodies)
+    kernel_paths: tuple[str, ...] = ("src/repro/kernels/",)
+
+    def in_scope(self, rel_path: str, fragments: tuple[str, ...]) -> bool:
+        return any(rel_path.startswith(f) or f in rel_path
+                   for f in fragments)
+
+
+def normalize(path: str) -> str:
+    """Posix path relative to the cwd when possible (stable across the
+    CLI being handed ``src``, ``./src`` or an absolute path)."""
+    ap = os.path.abspath(path)
+    cwd = os.getcwd()
+    if ap == cwd:
+        rel = "."
+    elif ap.startswith(cwd + os.sep):
+        rel = ap[len(cwd) + 1:]
+    else:
+        rel = ap
+    return rel.replace(os.sep, "/")

@@ -1,0 +1,92 @@
+"""higgslint CLI: ``python -m repro.analysis.lint [paths...]``.
+
+Runs the repo-specific invariant rules (R1-R6) and, when a ``ruff``
+binary is available (CI installs one), the style gate too — one
+command for both lints.  Exit codes: 0 clean, 1 findings, 2 usage or
+missing-baseline errors.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import os
+import shutil
+import subprocess
+import sys
+
+from repro.analysis import report
+from repro.analysis.config import DEFAULT_BASELINE, LintConfig
+from repro.analysis.walker import collect_files, lint_paths
+
+
+def _run_ruff(paths: list[str]) -> int:
+    exe = shutil.which("ruff")
+    if exe is None:
+        print("higgslint: ruff not installed; skipping style gate "
+              "(CI runs it)")
+        return 0
+    proc = subprocess.run([exe, "check", *paths])
+    return proc.returncode
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="HIGGS repo invariant linter (rules R1-R6)")
+    ap.add_argument("paths", nargs="*", default=["src", "benchmarks"],
+                    help="files/directories to lint "
+                         "(default: src benchmarks)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="suppression baseline JSON "
+                         f"(default: {DEFAULT_BASELINE})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to the baseline "
+                         "and exit 0")
+    ap.add_argument("--no-ruff", action="store_true",
+                    help="skip the ruff style gate even if installed")
+    args = ap.parse_args(argv)
+    paths = args.paths or ["src", "benchmarks"]
+
+    try:
+        collect_files(paths)
+    except FileNotFoundError as e:
+        print(f"higgslint: {e}", file=sys.stderr)
+        return 2
+
+    findings, n_suppressed = lint_paths(paths, LintConfig())
+    n_files = len(collect_files(paths))
+
+    if args.write_baseline:
+        report.save_baseline(args.baseline, findings)
+        print(f"higgslint: wrote {len(findings)} entr"
+              f"{'y' if len(findings) == 1 else 'ies'} to "
+              f"{args.baseline}")
+        return 0
+
+    if os.path.exists(args.baseline):
+        try:
+            baseline = report.load_baseline(args.baseline)
+        except (ValueError, KeyError, TypeError) as e:
+            print(f"higgslint: bad baseline: {e}", file=sys.stderr)
+            return 2
+    elif args.baseline != DEFAULT_BASELINE:
+        print(f"higgslint: baseline not found: {args.baseline}",
+              file=sys.stderr)
+        return 2
+    else:
+        baseline = collections.Counter()
+
+    new, n_baselined, n_stale = report.apply_baseline(findings, baseline)
+    print(report.render_report(new, n_suppressed=n_suppressed,
+                               n_baselined=n_baselined, n_stale=n_stale,
+                               n_files=n_files))
+    rc = 1 if new else 0
+
+    if not args.no_ruff:
+        ruff_rc = _run_ruff(paths)
+        rc = rc or (1 if ruff_rc else 0)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,92 @@
+"""Reporting and the committed suppression baseline.
+
+The baseline (``higgslint-baseline.json``) records known, intentionally
+exempt findings by their line-independent key ``(path, rule, message)``
+so unrelated edits that shift line numbers don't invalidate entries.
+Matching is count-aware: two identical findings need two entries, so
+new copies of a baselined pattern still fail the build.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+import tempfile
+from typing import Iterable
+
+from repro.analysis.walker import Finding
+
+BASELINE_VERSION = 1
+
+
+def load_baseline(path: str) -> collections.Counter:
+    """Load a baseline file into a Counter of (path, rule, message)."""
+    with open(path, encoding="utf-8") as fh:
+        data = json.load(fh)
+    if not isinstance(data, dict) or data.get("version") != BASELINE_VERSION:
+        raise ValueError(
+            f"{path}: unsupported baseline (want version "
+            f"{BASELINE_VERSION}, got {data.get('version')!r})")
+    keys = collections.Counter()
+    for entry in data.get("entries", []):
+        keys[(entry["path"], entry["rule"], entry["message"])] += 1
+    return keys
+
+
+def save_baseline(path: str, findings: Iterable[Finding]) -> None:
+    """Write ``findings`` as a baseline, atomically (tmp + os.replace)."""
+    entries = [
+        {"path": f.path, "rule": f.rule, "message": f.message}
+        for f in sorted(findings,
+                        key=lambda f: (f.path, f.rule, f.message))
+    ]
+    payload = {"version": BASELINE_VERSION, "entries": entries}
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".higgslint-", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w", encoding="utf-8") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def apply_baseline(findings: list[Finding],
+                   baseline: collections.Counter
+                   ) -> tuple[list[Finding], int, int]:
+    """Split findings into (new, n_baselined, n_stale).
+
+    ``n_stale`` counts baseline entries that matched nothing — the
+    exempted code was fixed or removed, so the entry should be dropped
+    (reported as a warning, not a failure).
+    """
+    remaining = collections.Counter(baseline)
+    new: list[Finding] = []
+    n_baselined = 0
+    for f in findings:
+        key = f.baseline_key()
+        if remaining[key] > 0:
+            remaining[key] -= 1
+            n_baselined += 1
+        else:
+            new.append(f)
+    n_stale = sum(remaining.values())
+    return new, n_baselined, n_stale
+
+
+def render_report(findings: list[Finding], *, n_suppressed: int,
+                  n_baselined: int, n_stale: int,
+                  n_files: int) -> str:
+    lines = [f.render() for f in findings]
+    summary = (f"higgslint: {len(findings)} finding(s) in {n_files} "
+               f"file(s) ({n_baselined} baselined, {n_suppressed} "
+               f"inline-suppressed)")
+    if n_stale:
+        summary += (f"; warning: {n_stale} stale baseline entr"
+                    f"{'y' if n_stale == 1 else 'ies'} — regenerate "
+                    f"with --write-baseline")
+    lines.append(summary)
+    return "\n".join(lines)

@@ -1,0 +1,505 @@
+"""The higgslint rule catalog (R1-R6).
+
+Each rule enforces one invariant the HIGGS repro's guarantees rest on;
+docs/API.md "Invariants & static analysis" is the user-facing catalog.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator
+
+from repro.analysis.walker import FileContext, Finding, Rule, register
+
+_WALL_CLOCK = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "datetime.now", "datetime.utcnow", "datetime.datetime.now",
+    "datetime.datetime.utcnow", "datetime.date.today", "date.today",
+}
+
+_LEGACY_NP_RANDOM = {
+    "seed", "rand", "randn", "randint", "random", "random_sample",
+    "choice", "shuffle", "permutation", "normal", "uniform", "poisson",
+    "integers",
+}
+
+_STDLIB_RANDOM = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "seed", "betavariate", "expovariate",
+}
+
+
+def _func_text(node: ast.Call) -> str:
+    return FileContext.text(node.func)
+
+
+def _iter_funcs(tree: ast.AST) -> Iterator[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+@register
+class DeterminismRule(Rule):
+    """R1: retention/partition decisions must be bit-deterministic.
+
+    Everywhere: RNG must be seeded (``np.random.default_rng(seed)``,
+    never the legacy global-state module or an unseeded generator).
+    In the decision paths (``core/``, ``shard/``, ``stream/pipeline.py``):
+    additionally no wall-clock reads and no iteration over ``set``s
+    (whose order varies with hash randomization across processes —
+    exactly what breaks shard bit-identity).
+    """
+
+    id = "R1"
+    title = "determinism"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        decision = ctx.in_scope(ctx.config.determinism_paths)
+        imports_random = any(
+            isinstance(n, ast.Import)
+            and any(a.name == "random" for a in n.names)
+            for n in ast.walk(ctx.tree))
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                yield from self._check_call(ctx, node, decision,
+                                            imports_random)
+            elif decision:
+                it = None
+                if isinstance(node, ast.For):
+                    it = node.iter
+                elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                       ast.DictComp, ast.GeneratorExp)):
+                    it = node.generators[0].iter
+                if it is not None and self._is_set_expr(it):
+                    yield self.finding(
+                        ctx, node,
+                        f"iteration over a set ({ctx.text(it)!r}) is "
+                        f"order-nondeterministic in a decision path; "
+                        f"sort it first")
+
+    @staticmethod
+    def _is_set_expr(node: ast.expr) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        return (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id in ("set", "frozenset"))
+
+    def _check_call(self, ctx: FileContext, node: ast.Call,
+                    decision: bool, imports_random: bool
+                    ) -> Iterator[Finding]:
+        fn = _func_text(node)
+        unseeded = (not node.args and not node.keywords) or (
+            len(node.args) == 1 and not node.keywords
+            and isinstance(node.args[0], ast.Constant)
+            and node.args[0].value is None)
+        if fn.endswith(".default_rng") and unseeded:
+            yield self.finding(
+                ctx, node, "unseeded np.random.default_rng(): pass an "
+                "explicit seed so runs are reproducible")
+        elif fn.endswith("random.RandomState") and unseeded:
+            yield self.finding(
+                ctx, node, "unseeded np.random.RandomState(): pass an "
+                "explicit seed so runs are reproducible")
+        elif re.fullmatch(r"(np|numpy)\.random\.\w+", fn) \
+                and fn.split(".")[-1] in _LEGACY_NP_RANDOM:
+            # jax.random.* is explicitly keyed and deterministic; only
+            # the numpy global-state module is banned
+            yield self.finding(
+                ctx, node, f"legacy global-state RNG {fn!r}: use a "
+                f"seeded np.random.default_rng(seed) generator")
+        elif imports_random and fn.startswith("random.") \
+                and fn.split(".")[-1] in _STDLIB_RANDOM:
+            yield self.finding(
+                ctx, node, f"stdlib global-state RNG {fn!r}: use a "
+                f"seeded np.random.default_rng(seed) generator")
+        if decision and fn in _WALL_CLOCK:
+            yield self.finding(
+                ctx, node, f"wall-clock read {fn!r} in a decision path: "
+                f"retention/partition decisions must depend only on "
+                f"stream timestamps")
+
+
+@register
+class PoolIndexRule(Rule):
+    """R2: global-vs-physical id discipline (the PR 5 contract).
+
+    ``_LevelPool`` slabs hold only the retained window: global node id
+    ``u`` lives at physical slot ``u - base``.  Outside the pool class,
+    indexing ``.arrs`` directly (or via an alias) bypasses the
+    ``gather()`` base translation and silently reads the wrong node
+    once retention drops a prefix.
+    """
+
+    id = "R2"
+    title = "id discipline"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        allowed = set(ctx.config.pool_owner_classes)
+        yield from self._scan(ctx, ctx.tree, in_allowed=False,
+                              allowed=allowed)
+
+    def _scan(self, ctx: FileContext, scope: ast.AST, in_allowed: bool,
+              allowed: set) -> Iterator[Finding]:
+        body = scope.body if hasattr(scope, "body") else []
+        for node in body:
+            if isinstance(node, ast.ClassDef):
+                yield from self._scan(ctx, node,
+                                      in_allowed or node.name in allowed,
+                                      allowed)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if not in_allowed:
+                    yield from self._scan_func(ctx, node)
+            else:
+                if not in_allowed:
+                    yield from self._scan_stmts(ctx, node, aliases=set())
+
+    def _scan_func(self, ctx: FileContext, fn: ast.AST
+                   ) -> Iterator[Finding]:
+        aliases: set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and self._mentions_arrs(
+                    node.value):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        aliases.add(tgt.id)
+                        yield self.finding(
+                            ctx, node,
+                            f"aliasing level-pool arrays "
+                            f"({ctx.text(node.value)!r}) exposes "
+                            f"physical-slot indexing; use "
+                            f"_LevelPool.gather() (global ids) instead")
+        yield from self._scan_stmts(ctx, fn, aliases)
+
+    def _scan_stmts(self, ctx: FileContext, root: ast.AST,
+                    aliases: set[str]) -> Iterator[Finding]:
+        for node in ast.walk(root):
+            if isinstance(node, ast.Subscript):
+                v = node.value
+                if isinstance(v, ast.Attribute) and v.attr == "arrs":
+                    yield self.finding(
+                        ctx, node,
+                        f"direct level-pool indexing "
+                        f"{ctx.text(node)!r} bypasses the "
+                        f"global->physical base translation; use "
+                        f"_LevelPool.gather() instead")
+
+    @staticmethod
+    def _mentions_arrs(node: ast.expr) -> bool:
+        """True when the expression exposes a *bare* slab reference —
+        an ``.arrs`` attribute that is not itself subscripted (the
+        subscripted form is the direct-indexing finding instead)."""
+        subscripted = {id(n.value) for n in ast.walk(node)
+                       if isinstance(n, ast.Subscript)}
+        return any(isinstance(n, ast.Attribute) and n.attr == "arrs"
+                   and id(n) not in subscripted
+                   for n in ast.walk(node))
+
+
+@register
+class SnapshotRule(Rule):
+    """R3: snapshot completeness (restore-drift detector).
+
+    Every attribute a ``GraphSummary`` implementation assigns in
+    ``__init__`` must be visible in ``state_dict``/``load_state`` (by
+    attribute or key name, leading underscores ignored) or be declared
+    derived in a class-level ``_SNAPSHOT_DERIVED`` tuple.  A new field
+    that is neither persisted nor declared derived is exactly the PR 3/5
+    bug class: state silently lost across save/restore.
+    """
+
+    id = "R3"
+    title = "snapshot completeness"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                yield from self._check_class(ctx, node)
+
+    def _check_class(self, ctx: FileContext, cls: ast.ClassDef
+                     ) -> Iterator[Finding]:
+        methods = {n.name: n for n in cls.body
+                   if isinstance(n, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef))}
+        if not {"__init__", "state_dict", "load_state"} <= set(methods):
+            return
+        derived = self._derived(cls)
+        mentions = self._mentions(methods["state_dict"],
+                                  methods["load_state"])
+        for attr, node in self._init_attrs(methods["__init__"]):
+            if attr in derived:
+                continue
+            if attr in mentions or attr.lstrip("_") in mentions:
+                continue
+            yield self.finding(
+                ctx, node,
+                f"__init__ attribute {attr!r} of class {cls.name!r} "
+                f"does not round-trip through state_dict()/load_state(); "
+                f"persist it or list it in _SNAPSHOT_DERIVED")
+
+    @staticmethod
+    def _derived(cls: ast.ClassDef) -> set[str]:
+        out: set[str] = set()
+        for node in cls.body:
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name) \
+                            and tgt.id == "_SNAPSHOT_DERIVED" \
+                            and isinstance(node.value,
+                                           (ast.Tuple, ast.List)):
+                        out.update(e.value for e in node.value.elts
+                                   if isinstance(e, ast.Constant)
+                                   and isinstance(e.value, str))
+        return out
+
+    @staticmethod
+    def _init_attrs(init: ast.AST) -> list[tuple[str, ast.AST]]:
+        out: list[tuple[str, ast.AST]] = []
+        seen: set[str] = set()
+
+        def targets(node):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Tuple):
+                        yield from t.elts
+                    else:
+                        yield t
+            elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+                yield node.target
+
+        for node in ast.walk(init):
+            for t in targets(node) if isinstance(
+                    node, (ast.Assign, ast.AnnAssign, ast.AugAssign)) \
+                    else ():
+                if isinstance(t, ast.Attribute) \
+                        and isinstance(t.value, ast.Name) \
+                        and t.value.id == "self" \
+                        and t.attr not in seen:
+                    seen.add(t.attr)
+                    out.append((t.attr, node))
+        return out
+
+    @staticmethod
+    def _mentions(*methods: ast.AST) -> set[str]:
+        out: set[str] = set()
+        for m in methods:
+            for node in ast.walk(m):
+                if isinstance(node, ast.Attribute):
+                    out.add(node.attr)
+                elif isinstance(node, ast.Constant) \
+                        and isinstance(node.value, str):
+                    out.add(node.value)
+        return out
+
+
+@register
+class AtomicWriteRule(Rule):
+    """R4: crash-atomic persistence (the PR 3 tmp + ``os.replace`` rule).
+
+    Outside ``checkpoint/store.py``, any write-mode ``open``,
+    ``np.savez``/``np.save`` or ``Path.write_*`` must live in a function
+    that also calls ``os.replace``/``os.rename`` — i.e. it writes a
+    sibling tmp file and renames it in.  A plain in-place write torn by
+    preemption is exactly the truncated-cursor bug PR 3 fixed.
+    """
+
+    id = "R4"
+    title = "atomic writes"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if ctx.in_scope(ctx.config.atomic_write_exempt):
+            return
+        yield from self._scan(ctx, ctx.tree, enclosing_atomic=False)
+
+    def _scan(self, ctx: FileContext, scope: ast.AST,
+              enclosing_atomic: bool) -> Iterator[Finding]:
+        is_fn = isinstance(scope, (ast.FunctionDef, ast.AsyncFunctionDef))
+        atomic = enclosing_atomic or (is_fn and self._renames(scope))
+        for node in ast.iter_child_nodes(scope):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                yield from self._scan(ctx, node, atomic)
+            else:
+                if not atomic:
+                    for call in (n for n in ast.walk(node)
+                                 if isinstance(n, ast.Call)):
+                        msg = self._write_call(call)
+                        if msg:
+                            yield self.finding(
+                                ctx, call,
+                                f"non-atomic write ({msg}): write a "
+                                f"sibling tmp file and os.replace() it "
+                                f"in (see checkpoint/store.py)")
+
+    @staticmethod
+    def _renames(fn: ast.AST) -> bool:
+        return any(isinstance(n, ast.Call)
+                   and _func_text(n) in ("os.replace", "os.rename")
+                   for n in ast.walk(fn))
+
+    @staticmethod
+    def _write_call(call: ast.Call) -> str | None:
+        fn = _func_text(call)
+        if fn in ("open", "io.open"):
+            mode = None
+            if len(call.args) >= 2 and isinstance(call.args[1],
+                                                  ast.Constant):
+                mode = call.args[1].value
+            for kw in call.keywords:
+                if kw.arg == "mode" and isinstance(kw.value, ast.Constant):
+                    mode = kw.value.value
+            if isinstance(mode, str) and any(c in mode for c in "wax"):
+                return f"open(..., {mode!r})"
+            return None
+        if fn.endswith((".savez", ".savez_compressed")) \
+                or fn in ("np.save", "numpy.save"):
+            return fn
+        if fn.endswith((".write_text", ".write_bytes")):
+            return fn
+        return None
+
+
+@register
+class CacheInvalidationRule(Rule):
+    """R5: every structure-bearing mutation pairs with a
+    ``structure_version`` bump.
+
+    The planner memoizes boundary-search plans keyed by
+    ``structure_version``; a mutation that skips the bump serves stale
+    plans (the PR 4 LRU bug).  Within classes that own ``_version``,
+    methods calling pool/leaf-index/overflow mutators must also assign
+    ``self._version`` (or carry a justified suppression when a caller
+    holds the bump).
+    """
+
+    id = "R5"
+    title = "cache invalidation"
+
+    _ANY_RECV = {"drop_prefix", "append_batch"}
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if not ctx.in_scope(ctx.config.structure_files):
+            return
+        for cls in (n for n in ast.walk(ctx.tree)
+                    if isinstance(n, ast.ClassDef)):
+            init = next((m for m in cls.body
+                         if isinstance(m, ast.FunctionDef)
+                         and m.name == "__init__"), None)
+            if init is None or not self._assigns_version(init):
+                continue
+            for m in cls.body:
+                if not isinstance(m, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    continue
+                if m.name in ("__init__", "load_state", "state_dict"):
+                    continue
+                if self._assigns_version(m):
+                    continue
+                for call in (n for n in ast.walk(m)
+                             if isinstance(n, ast.Call)):
+                    if self._is_mutator(call):
+                        yield self.finding(
+                            ctx, call,
+                            f"{m.name!r} mutates tree structure "
+                            f"({FileContext.text(call.func)}) without "
+                            f"bumping self._version — stale memoized "
+                            f"plans will survive")
+
+    @classmethod
+    def _is_mutator(cls, call: ast.Call) -> bool:
+        if not isinstance(call.func, ast.Attribute):
+            return False
+        attr = call.func.attr
+        recv = FileContext.text(call.func.value)
+        if attr in cls._ANY_RECV:
+            return True
+        if attr in ("append", "extend") and ("pools" in recv
+                                             or "_leaves" in recv):
+            return True
+        if attr == "drop" and (recv == "self.ob" or recv.endswith(".ob")):
+            return True
+        if attr == "pop" and recv.endswith(".records"):
+            return True
+        return False
+
+    @staticmethod
+    def _assigns_version(fn: ast.AST) -> bool:
+        for node in ast.walk(fn):
+            tgt = None
+            if isinstance(node, ast.Assign):
+                tgt = node.targets[0]
+            elif isinstance(node, ast.AugAssign):
+                tgt = node.target
+            if isinstance(tgt, ast.Attribute) and tgt.attr == "_version" \
+                    and isinstance(tgt.value, ast.Name) \
+                    and tgt.value.id == "self":
+                return True
+        return False
+
+
+@register
+class KernelPurityRule(Rule):
+    """R6: no host side effects inside jitted / pallas bodies.
+
+    ``print``, ``.item()`` and numpy calls on traced values either fail
+    at trace time in surprising ways or silently force a host sync per
+    kernel launch; both are banned inside ``kernels/`` traced bodies
+    (jit-decorated functions and functions handed to ``pallas_call``,
+    including their nested helpers).
+    """
+
+    id = "R6"
+    title = "kernel purity"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if not ctx.in_scope(ctx.config.kernel_paths):
+            return
+        traced = self._traced_names(ctx.tree)
+        for fn in _iter_funcs(ctx.tree):
+            if fn.name in traced or self._jit_decorated(fn):
+                yield from self._check_body(ctx, fn)
+
+    @staticmethod
+    def _jit_decorated(fn: ast.FunctionDef) -> bool:
+        return any("jit" in FileContext.text(d)
+                   for d in fn.decorator_list)
+
+    @staticmethod
+    def _traced_names(tree: ast.AST) -> set[str]:
+        names: set[str] = set()
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and "pallas_call" in _func_text(node)):
+                continue
+            for arg in node.args[:1]:
+                if isinstance(arg, ast.Name):
+                    names.add(arg.id)
+                elif isinstance(arg, ast.Call) \
+                        and "partial" in _func_text(arg) \
+                        and arg.args \
+                        and isinstance(arg.args[0], ast.Name):
+                    names.add(arg.args[0].id)
+        return names
+
+    def _check_body(self, ctx: FileContext, fn: ast.FunctionDef
+                    ) -> Iterator[Finding]:
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            text = _func_text(node)
+            if text == "print":
+                yield self.finding(
+                    ctx, node, f"print() inside traced body "
+                    f"{fn.name!r}: host side effects are banned in "
+                    f"kernels (use jax.debug.print for debugging)")
+            elif text.endswith(".item"):
+                yield self.finding(
+                    ctx, node, f".item() inside traced body "
+                    f"{fn.name!r} forces a device->host sync per launch")
+            elif text.startswith(("np.", "numpy.")):
+                yield self.finding(
+                    ctx, node, f"numpy call {text!r} inside traced body "
+                    f"{fn.name!r}: numpy on traced values breaks "
+                    f"tracing; use jnp / jax.lax")

@@ -1,0 +1,211 @@
+"""Runtime sanitizer: drain-barrier structural assertions.
+
+``HIGGS_SANITIZE=1`` turns on deep invariant checks at the natural
+barriers — the end of :meth:`HiggsSketch._drain` / :meth:`flush` and
+the sharded read barrier (:meth:`ShardedHiggs._sync`).  At those points
+the tree is quiescent, so every cross-structure invariant must hold
+exactly:
+
+* **subtree mass conservation** — a parent's matrix weight plus its
+  overflow-block weight equals the sum over its resident children;
+* **leaf-interval partition cover** — the leaf index and the level-1
+  pool stay in lockstep, with ordered, non-overlapping intervals;
+* **pool base monotonicity** — each level's ``base`` matches what the
+  segment lifecycle's evictions/coarsenings imply;
+* **overflow-key ownership** — every OB key names a live, retained
+  node;
+* **cascade completeness** — every buildable parent has been built
+  (``total`` ratios follow theta exactly).
+
+Checks are numpy-only (no jax import) so this module can be imported
+from anywhere in ``core/`` without cycles.  Cost is one pass over the
+pools per drain — cheap enough that tier-1 CI runs with it on.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+_ENV = "HIGGS_SANITIZE"
+_FORCED: bool | None = None     # test override, see set_enabled()
+
+
+class SanitizeError(AssertionError):
+    """A structural invariant was violated at a drain barrier."""
+
+
+def enabled() -> bool:
+    """Live check (reads the env var each call) so tests and long
+    processes can flip sanitizing without re-importing."""
+    if _FORCED is not None:
+        return _FORCED
+    return os.environ.get(_ENV, "") not in ("", "0")
+
+
+def set_enabled(value: bool | None) -> None:
+    """Force sanitizing on/off regardless of the environment
+    (``None`` restores env-var control).  Test hook."""
+    global _FORCED
+    _FORCED = value
+
+
+def maybe_check(sketch) -> None:
+    """Run every invariant check when sanitizing is enabled.
+
+    ``sketch`` is a :class:`~repro.core.higgs.HiggsSketch`; the checks
+    only touch its host-side structures.  Raises :class:`SanitizeError`
+    with a precise message on the first violation.
+    """
+    if not enabled():
+        return
+    check_pool_bases(sketch)
+    check_interval_cover(sketch)
+    check_cascade(sketch)
+    check_ob_ownership(sketch)
+    check_mass_conservation(sketch)
+
+
+def _fail(what: str, detail: str) -> None:
+    raise SanitizeError(f"HIGGS_SANITIZE: {what}: {detail}")
+
+
+def check_pool_bases(sketch) -> None:
+    """Pool ``base`` offsets must match the lifecycle's drop ledger."""
+    st = sketch.segments
+    if not st.active:
+        for lvl, pool in enumerate(sketch.pools, start=1):
+            if pool.base != 0:
+                _fail("pool base", f"retention inactive but level {lvl} "
+                      f"has base={pool.base}")
+        return
+    root = st.root_level
+    if len(sketch.pools) > root:
+        _fail("level cap", f"{len(sketch.pools)} levels exceed the "
+              f"segment root level {root}")
+    dropped = st.n_evicted + st.n_coarse
+    for lvl, pool in enumerate(sketch.pools, start=1):
+        want = st.n_evicted if lvl == root \
+            else dropped * st.nodes_per_segment(lvl)
+        if pool.base != want:
+            _fail("pool base", f"level {lvl}: base={pool.base} but "
+                  f"n_evicted={st.n_evicted}, n_coarse={st.n_coarse} "
+                  f"imply {want}")
+
+
+def check_interval_cover(sketch) -> None:
+    """Leaf intervals partition the retained stream suffix in order."""
+    lv = sketch._leaves
+    if lv.n != sketch.pools[0].n:
+        _fail("interval cover", f"{lv.n} leaf intervals vs "
+              f"{sketch.pools[0].n} retained level-1 nodes")
+    if lv.n == 0:
+        return
+    starts, ends = lv.starts, lv.ends
+    if sketch.segments.active:
+        # timestamp ordering is a hard invariant only under the
+        # lifecycle (sealing reads interval keys positionally, eviction
+        # compares the oldest segment's t_end): without retention the
+        # sketch tolerates timestamp restarts across insert() calls —
+        # the API tests do exactly that — and interval keys become
+        # best-effort
+        if (ends < starts).any():
+            i = int(np.argmax(ends < starts))
+            _fail("interval cover", f"leaf {i}: end {int(ends[i])} < "
+                  f"start {int(starts[i])}")
+        if sketch.params.use_ob:
+            # (the OB ablation's recursive spill re-opens leaves with
+            # older timestamps, so strict ordering needs OBs on)
+            gap_ok = starts[1:] > ends[:-1]
+            if not gap_ok.all():
+                i = int(np.argmin(gap_ok))
+                _fail("interval cover", f"leaves {i}->{i + 1} out of "
+                      f"order: end {int(ends[i])} vs start "
+                      f"{int(starts[i + 1])}")
+    if int(ends[-1]) > sketch._t_last:
+        _fail("interval cover", f"newest leaf ends at {int(ends[-1])} "
+              f"past _t_last={sketch._t_last}")
+
+
+def check_cascade(sketch) -> None:
+    """Every buildable parent exists: at a quiescent barrier the level
+    totals follow theta exactly (paper Alg. 2 run to fixpoint)."""
+    p = sketch.params
+    cap = sketch.segments.level_cap
+    for j in range(1, len(sketch.pools)):
+        plevel = j + 1
+        if plevel > p.max_levels or (cap is not None and plevel > cap):
+            if sketch.pools[j].total:
+                _fail("cascade", f"level {plevel} has nodes past the "
+                      f"level cap")
+            continue
+        want = sketch.pools[j - 1].total // p.theta
+        got = sketch.pools[j].total
+        if got != want:
+            _fail("cascade", f"level {plevel}: {got} parents but level "
+                  f"{j} has {sketch.pools[j - 1].total} nodes "
+                  f"(expected {want})")
+    st = sketch.segments
+    if st.active and len(sketch.pools) >= st.root_level:
+        roots = sketch.pools[st.root_level - 1].total
+        if roots != st.n_sealed:
+            _fail("cascade", f"{roots} segment roots vs "
+                  f"{st.n_sealed} sealed segments")
+
+
+def check_ob_ownership(sketch) -> None:
+    """Every overflow-block key names a live, retained node."""
+    for (level, node) in sketch.ob._cols:
+        if not 1 <= level <= len(sketch.pools):
+            _fail("OB ownership", f"key ({level}, {node}) names a "
+                  f"nonexistent level")
+        pool = sketch.pools[level - 1]
+        if not pool.base <= node < pool.total:
+            _fail("OB ownership", f"key ({level}, {node}) outside the "
+                  f"retained window [{pool.base}, {pool.total})")
+
+
+def _node_mass(sketch, level: int) -> np.ndarray:
+    """Per-node total weight (matrix + overflow) for the retained
+    window of one level, indexed by physical slot."""
+    pool = sketch.pools[level - 1]
+    if pool.n == 0:
+        return np.zeros((0,), np.float64)
+    # physical slabs summed directly: mass accounting is slot-local, no
+    # id translation involved
+    mass = pool.arrs["w"][: pool.n].sum(  # higgslint: disable=R2
+        axis=(1, 2, 3), dtype=np.float64)
+    for (lvl, node) in sketch.ob._cols:
+        if lvl == level and pool.base <= node < pool.total:
+            cols = sketch.ob.get(lvl, node)
+            mass[node - pool.base] += float(cols["w"].sum())
+    return mass
+
+
+def check_mass_conservation(sketch) -> None:
+    """A parent's mass equals the sum of its resident children's mass.
+
+    Skips parents with any child outside the retained window (the
+    coarsening case: children dropped, root kept).  Tolerance covers
+    float32 accumulation-order differences between the child and parent
+    sums.
+    """
+    theta = sketch.params.theta
+    for level in range(2, len(sketch.pools) + 1):
+        child = sketch.pools[level - 2]
+        parent = sketch.pools[level - 1]
+        if parent.n == 0:
+            continue
+        child_mass = _node_mass(sketch, level - 1)
+        parent_mass = _node_mass(sketch, level)
+        for slot in range(parent.n):
+            u = parent.base + slot
+            c0, c1 = u * theta, (u + 1) * theta
+            if c0 < child.base or c1 > child.total:
+                continue               # children coarsened away
+            want = child_mass[c0 - child.base: c1 - child.base].sum()
+            got = parent_mass[slot]
+            if not np.isclose(got, want, rtol=1e-4, atol=1e-3):
+                _fail("mass conservation", f"level {level} node {u}: "
+                      f"mass {got:.6f} but its children sum to "
+                      f"{want:.6f}")

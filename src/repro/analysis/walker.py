@@ -1,0 +1,144 @@
+"""higgslint core: file walking, rule registry, inline suppressions.
+
+A :class:`Rule` inspects one parsed file (a :class:`FileContext`) and
+yields :class:`Finding`s.  Findings carry ``path:line:col`` for the
+report and a line-independent ``(path, rule, message)`` key for the
+committed suppression baseline, so baseline entries survive unrelated
+edits that shift line numbers.
+
+Inline suppressions: a ``# higgslint: disable=R2`` comment (optionally
+``disable=R2,R5`` and a trailing justification) suppresses those rules
+on its own physical line.  Every intentional exemption in the tree
+carries one, with the justification in the comment.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Iterable, Iterator
+
+from repro.analysis.config import LintConfig, normalize
+
+_DISABLE_RE = re.compile(
+    r"#\s*higgslint:\s*disable="
+    r"([A-Za-z0-9_]+(?:\s*,\s*[A-Za-z0-9_]+)*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def baseline_key(self) -> tuple[str, str, str]:
+        return (self.path, self.rule, self.message)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: " \
+               f"[{self.rule}] {self.message}"
+
+
+class Rule:
+    """One invariant check.  Subclasses set ``id``/``title`` and
+    implement :meth:`check` yielding findings for one file."""
+
+    id = "R0"
+    title = "abstract rule"
+
+    def check(self, ctx: "FileContext") -> Iterator[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: "FileContext", node: ast.AST,
+                message: str) -> Finding:
+        return Finding(self.id, ctx.path, getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0) + 1, message)
+
+
+RULES: list[type[Rule]] = []
+
+
+def register(cls: type[Rule]) -> type[Rule]:
+    RULES.append(cls)
+    return cls
+
+
+class FileContext:
+    def __init__(self, path: str, source: str, config: LintConfig):
+        self.path = path
+        self.source = source
+        self.config = config
+        self.tree = ast.parse(source, filename=path)
+        self.disabled: dict[int, set[str]] = {}
+        for i, line in enumerate(source.splitlines(), start=1):
+            m = _DISABLE_RE.search(line)
+            if m:
+                self.disabled[i] = {r.strip() for r in
+                                    m.group(1).split(",") if r.strip()}
+
+    def suppressed(self, finding: Finding) -> bool:
+        return finding.rule in self.disabled.get(finding.line, ())
+
+    def in_scope(self, fragments: tuple[str, ...]) -> bool:
+        return self.config.in_scope(self.path, fragments)
+
+    @staticmethod
+    def text(node: ast.AST) -> str:
+        try:
+            return ast.unparse(node)
+        except Exception:
+            return "<expr>"
+
+
+def collect_files(paths: Iterable[str]) -> list[str]:
+    """Expand files/directories into a sorted list of .py files."""
+    out: list[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            out.append(p)
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if not d.startswith(".")
+                                 and d != "__pycache__")
+                out.extend(os.path.join(root, f) for f in sorted(files)
+                           if f.endswith(".py"))
+        else:
+            raise FileNotFoundError(f"no such file or directory: {p!r}")
+    return sorted(dict.fromkeys(normalize(p) for p in out))
+
+
+def lint_paths(paths: Iterable[str],
+               config: LintConfig | None = None
+               ) -> tuple[list[Finding], int]:
+    """Run every registered rule over ``paths``.
+
+    Returns ``(findings, n_inline_suppressed)`` — findings are sorted by
+    (path, line, rule); inline-disabled ones are counted, not returned.
+    """
+    # import for side effect: rule registration
+    from repro.analysis import rules as _rules  # noqa: F401
+    config = config or LintConfig()
+    findings: list[Finding] = []
+    n_suppressed = 0
+    for path in collect_files(paths):
+        with open(path, encoding="utf-8") as fh:
+            source = fh.read()
+        try:
+            ctx = FileContext(path, source, config)
+        except SyntaxError as e:
+            findings.append(Finding("parse", path, e.lineno or 1,
+                                    (e.offset or 0) + 1,
+                                    f"syntax error: {e.msg}"))
+            continue
+        for rule_cls in RULES:
+            for f in rule_cls().check(ctx):
+                if ctx.suppressed(f):
+                    n_suppressed += 1
+                else:
+                    findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, n_suppressed

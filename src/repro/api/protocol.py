@@ -26,9 +26,9 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
-from repro.api.queries import (EDGE_LOWERED, EdgeQuery, PathQuery, Query,
-                               QueryBatch, QueryResult, QueryStats,
-                               SubgraphQuery, VertexQuery)
+from repro.api.queries import (EdgeQuery, PathQuery, Query, QueryBatch,
+                               QueryResult, QueryStats, SubgraphQuery,
+                               VertexQuery)
 
 
 @runtime_checkable

@@ -1,7 +1,7 @@
-from repro.checkpoint.store import (save_checkpoint, restore_checkpoint,
-                                    restore_arrays, read_manifest,
-                                    load_snapshot, latest_step,
-                                    gc_checkpoints, reshard)
+from repro.checkpoint.store import (gc_checkpoints, latest_step,
+                                    load_snapshot, read_manifest, reshard,
+                                    restore_arrays, restore_checkpoint,
+                                    save_checkpoint)
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "restore_arrays",
            "read_manifest", "load_snapshot", "latest_step",

@@ -6,7 +6,6 @@ Shapes: ``SHAPES[shape]`` gives (seq_len, global_batch, step kind).
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
 
 ARCH_IDS = [

@@ -6,9 +6,9 @@ API as :class:`repro.core.higgs.HiggsSketch`; the benchmark harness reports
 both wall time and hardware-independent structural counters (buckets
 probed / entries scanned) — see DESIGN.md §8 note 4.
 """
-from repro.core.baselines.tcm import TCM
+from repro.core.baselines.auxotime import AuxoTime
 from repro.core.baselines.horae import Horae
 from repro.core.baselines.pgss import PGSS
-from repro.core.baselines.auxotime import AuxoTime
+from repro.core.baselines.tcm import TCM
 
 __all__ = ["TCM", "Horae", "PGSS", "AuxoTime"]

@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.core import hashing
 from repro.core.baselines._compound import CompoundQueryMixin
-from repro.core.baselines.horae import _FpLayer, _EMPTY
+from repro.core.baselines.horae import _EMPTY, _FpLayer
 
 
 class _PetLayer:
@@ -131,6 +131,8 @@ class AuxoTime(CompoundQueryMixin):
     name = "AuxoTime"
     snapshot_kind = "auxotime"
     temporal = True
+    # pure functions of (l_bits, cpt), rebuilt in __init__ (higgslint R3)
+    _SNAPSHOT_DERIVED = ("step", "levels", "name")
 
     def __init__(self, l_bits: int = 20, d: int = 48, b: int = 4,
                  F: int = 24, seed: int = 31, cpt: bool = False):

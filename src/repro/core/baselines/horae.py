@@ -123,6 +123,8 @@ class Horae(CompoundQueryMixin):
     name = "Horae"
     snapshot_kind = "horae"
     temporal = True
+    # pure functions of (l_bits, cpt), rebuilt in __init__ (higgslint R3)
+    _SNAPSHOT_DERIVED = ("step", "levels", "name")
 
     def __init__(self, l_bits: int = 20, d: int = 96, b: int = 4,
                  F: int = 24, seed: int = 11, cpt: bool = False):

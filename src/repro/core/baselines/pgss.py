@@ -20,6 +20,8 @@ class PGSS(CompoundQueryMixin):
     name = "PGSS"
     snapshot_kind = "pgss"
     temporal = True
+    # pure function of l_bits, rebuilt in __init__ (higgslint R3)
+    _SNAPSHOT_DERIVED = ("levels",)
 
     def __init__(self, l_bits: int = 20, m: int = 1 << 18, g: int = 2,
                  seed: int = 23):

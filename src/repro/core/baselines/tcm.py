@@ -16,6 +16,8 @@ class TCM(CompoundQueryMixin):
     name = "TCM"
     snapshot_kind = "tcm"
     temporal = False
+    # pure function of (seed, g), rebuilt in __init__ (higgslint R3)
+    _SNAPSHOT_DERIVED = ("seeds",)
 
     def __init__(self, d: int = 256, g: int = 4, seed: int = 7):
         self.d, self.g, self.seed = d, g, seed

@@ -271,8 +271,10 @@ def _write(args, record):
     mesh_tag = "multipod" if args.multi_pod else "pod"
     path = os.path.join(args.out,
                         f"{args.arch}_{args.shape}_{mesh_tag}.json")
-    with open(path, "w") as fh:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
         json.dump(record, fh, indent=1)
+    os.replace(tmp, path)
 
 
 if __name__ == "__main__":

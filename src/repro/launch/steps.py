@@ -2,8 +2,6 @@
 real launchers and the dry-run."""
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -42,8 +42,10 @@ def run_cell(arch, shape, multipod, out, force=False):
     dt = time.time() - t0
     if r.returncode != 0:
         err = (r.stderr or r.stdout).strip().splitlines()
-        with open(path.replace(".json", ".err"), "w") as fh:
+        err_path = path.replace(".json", ".err")
+        with open(err_path + ".tmp", "w") as fh:
             fh.write("\n".join(err))
+        os.replace(err_path + ".tmp", err_path)
         return arch, shape, tag, "FAILED", dt
     status = "compiled"
     if os.path.exists(path):

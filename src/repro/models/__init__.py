@@ -1,6 +1,6 @@
-from repro.models.transformer import (ModelConfig, init_params, forward_train,
-                                      forward_prefill, forward_decode,
-                                      init_decode_cache)
+from repro.models.transformer import (ModelConfig, forward_decode,
+                                      forward_prefill, forward_train,
+                                      init_decode_cache, init_params)
 
 __all__ = ["ModelConfig", "init_params", "forward_train", "forward_prefill",
            "forward_decode", "init_decode_cache"]

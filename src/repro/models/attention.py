@@ -9,8 +9,6 @@ structure and keeps live buffers at (B, H, qb, kb).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

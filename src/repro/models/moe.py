@@ -18,8 +18,6 @@ renormalized over the selected experts.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -49,7 +49,8 @@ class AdamW:
     max_grad_norm: float = 1.0
 
     def init(self, params):
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return AdamWState(step=jnp.zeros((), jnp.int32),
                           m=jax.tree.map(zeros, params),
                           v=jax.tree.map(zeros, params))

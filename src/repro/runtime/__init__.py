@@ -1,7 +1,7 @@
+from repro.runtime.compression import (compressed_psum, dequantize_int8,
+                                       quantize_int8)
 from repro.runtime.fault import (PreemptionGuard, StragglerMonitor,
                                  run_with_preemption)
-from repro.runtime.compression import compressed_psum, quantize_int8, \
-    dequantize_int8
 
 __all__ = ["PreemptionGuard", "StragglerMonitor", "run_with_preemption",
            "compressed_psum", "quantize_int8", "dequantize_int8"]

@@ -13,7 +13,6 @@ but the full control flow is exercised by tests.
 from __future__ import annotations
 
 import signal
-import time
 from collections import defaultdict, deque
 from typing import TYPE_CHECKING, Callable, Optional
 

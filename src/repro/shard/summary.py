@@ -52,6 +52,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.analysis.sanitize import maybe_check as _sanitize_check
 from repro.api.protocol import LegacyQueryMixin
 from repro.api.queries import QueryBatch, QueryResult
 from repro.core.higgs import HiggsSketch
@@ -76,6 +77,10 @@ class ShardedHiggs(LegacyQueryMixin):
 
     name = "HIGGS-sharded"
     snapshot_kind = "higgs-sharded"
+    # host/runtime wiring rebuilt in __init__ plus unsaved telemetry
+    # (partition_stats) — intentionally not serialized (higgslint R3)
+    _SNAPSHOT_DERIVED = ("partition_stats", "planner", "mesh", "_mode",
+                         "_pool")
 
     def __init__(self, shards: int = 4, parallel: str = "auto",
                  params: HiggsParams | None = None, **kw):
@@ -159,6 +164,8 @@ class ShardedHiggs(LegacyQueryMixin):
         for i, state in self._engine.collect().items():
             self._shards[i].load_state(*state)
         self._stale = False
+        for sh in self._shards:
+            _sanitize_check(sh)
 
     @property
     def shards(self) -> list[HiggsSketch]:

@@ -1,4 +1,4 @@
-from repro.stream.generator import (power_law_stream, lkml_like_stream,
+from repro.stream.generator import (lkml_like_stream, power_law_stream,
                                     variance_stream)
 from repro.stream.loader import load_konect
 from repro.stream.pipeline import StreamPipeline

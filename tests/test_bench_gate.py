@@ -1,0 +1,69 @@
+"""Schema-drift hardening of the perf gate: malformed baseline/measured
+JSON must fail loudly (clear message, non-zero exit), never crash with
+a bare ``KeyError`` or pass vacuously."""
+import json
+
+import pytest
+
+from benchmarks import common
+from benchmarks.compare_bench import SchemaError, compare, main
+
+
+GOOD = {"metrics": {"speedup": {"value": 2.0, "kind": "floor"},
+                    "leaves": {"value": 64.0, "kind": "exact"}}}
+
+
+def test_gate_passes_on_matching_metrics():
+    assert compare(GOOD, GOOD, tolerance=0.25) == []
+
+
+def test_gate_catches_floor_and_exact_regressions():
+    measured = {"metrics": {"speedup": {"value": 1.0, "kind": "floor"},
+                            "leaves": {"value": 65.0, "kind": "exact"}}}
+    failures = compare(measured, GOOD, tolerance=0.25)
+    assert len(failures) == 2
+
+
+def test_missing_value_key_is_schema_error_not_keyerror():
+    broken = {"metrics": {"speedup": {"val": 2.0}}}   # renamed field
+    with pytest.raises(SchemaError, match="speedup.*'value'"):
+        compare(GOOD, broken, tolerance=0.25)
+    with pytest.raises(SchemaError, match="measured"):
+        compare(broken, GOOD, tolerance=0.25)
+
+
+def test_non_numeric_value_is_schema_error():
+    broken = {"metrics": {"speedup": {"value": "fast", "kind": "floor"}}}
+    with pytest.raises(SchemaError, match="non-numeric"):
+        compare(GOOD, broken, tolerance=0.25)
+
+
+def test_empty_or_absent_baseline_metrics_rejected():
+    # an empty gate passing vacuously is the dangerous failure mode
+    with pytest.raises(SchemaError, match="empty|no 'metrics'"):
+        compare(GOOD, {"metrics": {}}, tolerance=0.25)
+    with pytest.raises(SchemaError, match="no 'metrics'"):
+        compare(GOOD, {"schema": 1}, tolerance=0.25)
+
+
+def test_cli_exit_codes(tmp_path):
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(GOOD))
+    broken = tmp_path / "broken.json"
+    broken.write_text(json.dumps({"metrics": {"speedup": {"v": 1}}}))
+    assert main([str(good), str(good)]) == 0
+    assert main([str(good), str(broken)]) == 2
+
+
+def test_record_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown kind"):
+        common.record("m", 1.0, kind="flor")
+
+
+def test_write_json_is_atomic(tmp_path, monkeypatch):
+    monkeypatch.setitem(common.METRICS, "m",
+                        {"value": 1.0, "kind": "info"})
+    out = tmp_path / "BENCH.json"
+    common.write_json(str(out))
+    assert json.loads(out.read_text())["metrics"]["m"]["value"] == 1.0
+    assert not (tmp_path / "BENCH.json.tmp").exists()
