@@ -44,6 +44,9 @@ def summarize(rec: dict) -> dict | None:
     return {
         "arch": rec["arch"], "shape": rec["shape"], "skip": False,
         **terms, "dominant": dom.replace("_s", ""),
+        # while loops the HLO scan could not bound: their bodies are
+        # costed ONCE, so every term above is a lower bound then
+        "unknown_trips": rec.get("unknown_trip_counts", 0),
         "useful_ratio": model_flops_dev / max(flops, 1),
         "roofline_frac": (model_flops_dev / PEAK) / max(total, 1e-12),
         "mem_bytes_per_dev": rec.get("memory", {}).get(
@@ -69,13 +72,15 @@ def run(out_dir: str = "experiments/dryrun"):
             common.emit(f"roofline/{s['arch']}/{s['shape']}", 0.0,
                         "skipped_na(long-context full attention)")
             continue
+        extra = (f";UNKNOWN_TRIPS={s['unknown_trips']}(terms are lower "
+                 f"bounds)" if s["unknown_trips"] else "")
         common.emit(
             f"roofline/{s['arch']}/{s['shape']}", 0.0,
             f"compute_s={s['compute_s']:.4g};memory_s={s['memory_s']:.4g};"
             f"collective_s={s['collective_s']:.4g};dom={s['dominant']};"
             f"useful={s['useful_ratio']:.2f};"
             f"roofline_frac={s['roofline_frac']:.3f};"
-            f"hbm_GB={s['mem_bytes_per_dev'] / 1e9:.1f}")
+            f"hbm_GB={s['mem_bytes_per_dev'] / 1e9:.1f}{extra}")
 
 
 if __name__ == "__main__":

@@ -42,6 +42,13 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--write-baseline", action="store_true",
                     help="write current findings to the baseline "
                          "and exit 0")
+    ap.add_argument("--prune-baseline", action="store_true",
+                    help="rewrite the baseline dropping entries that no "
+                         "longer match a finding (baselines only shrink)")
+    ap.add_argument("--fail-stale", action="store_true",
+                    help="exit 1 when stale baseline entries remain "
+                         "(CI: baselines shrink deliberately via "
+                         "--prune-baseline, never rot)")
     ap.add_argument("--no-ruff", action="store_true",
                     help="skip the ruff style gate even if installed")
     args = ap.parse_args(argv)
@@ -63,6 +70,16 @@ def main(argv: list[str] | None = None) -> int:
               f"{args.baseline}")
         return 0
 
+    if args.prune_baseline:
+        if not os.path.exists(args.baseline):
+            print(f"higgslint: baseline not found: {args.baseline}",
+                  file=sys.stderr)
+            return 2
+        n_pruned = report.prune_stale(args.baseline, findings)
+        print(f"higgslint: pruned {n_pruned} stale entr"
+              f"{'y' if n_pruned == 1 else 'ies'} from {args.baseline}")
+        return 0
+
     if os.path.exists(args.baseline):
         try:
             baseline = report.load_baseline(args.baseline)
@@ -81,6 +98,12 @@ def main(argv: list[str] | None = None) -> int:
                                n_baselined=n_baselined, n_stale=n_stale,
                                n_files=n_files))
     rc = 1 if new else 0
+    if args.fail_stale and n_stale:
+        print(f"higgslint: {n_stale} stale baseline entr"
+              f"{'y' if n_stale == 1 else 'ies'} (--fail-stale): run "
+              f"--prune-baseline and commit the shrunken baseline",
+              file=sys.stderr)
+        rc = rc or 1
 
     if not args.no_ruff:
         ruff_rc = _run_ruff(paths)

@@ -5,6 +5,11 @@ exempt findings by their line-independent key ``(path, rule, message)``
 so unrelated edits that shift line numbers don't invalidate entries.
 Matching is count-aware: two identical findings need two entries, so
 new copies of a baselined pattern still fail the build.
+
+The same machinery backs the compiled-path analyzer's
+``higgsxla-baseline.json``, whose payload carries *extra* top-level
+sections (``budgets``, ``costs``) alongside the entries — hence the
+``load_payload``/``save_payload`` split below.
 """
 from __future__ import annotations
 
@@ -19,28 +24,32 @@ from repro.analysis.walker import Finding
 BASELINE_VERSION = 1
 
 
-def load_baseline(path: str) -> collections.Counter:
-    """Load a baseline file into a Counter of (path, rule, message)."""
+def load_payload(path: str) -> dict:
+    """Load and version-check a baseline file's raw payload (entries
+    plus any extra sections like the higgsxla budgets/costs)."""
     with open(path, encoding="utf-8") as fh:
         data = json.load(fh)
     if not isinstance(data, dict) or data.get("version") != BASELINE_VERSION:
         raise ValueError(
             f"{path}: unsupported baseline (want version "
             f"{BASELINE_VERSION}, got {data.get('version')!r})")
+    return data
+
+
+def counter_from_payload(payload: dict) -> collections.Counter:
     keys = collections.Counter()
-    for entry in data.get("entries", []):
+    for entry in payload.get("entries", []):
         keys[(entry["path"], entry["rule"], entry["message"])] += 1
     return keys
 
 
-def save_baseline(path: str, findings: Iterable[Finding]) -> None:
-    """Write ``findings`` as a baseline, atomically (tmp + os.replace)."""
-    entries = [
-        {"path": f.path, "rule": f.rule, "message": f.message}
-        for f in sorted(findings,
-                        key=lambda f: (f.path, f.rule, f.message))
-    ]
-    payload = {"version": BASELINE_VERSION, "entries": entries}
+def load_baseline(path: str) -> collections.Counter:
+    """Load a baseline file into a Counter of (path, rule, message)."""
+    return counter_from_payload(load_payload(path))
+
+
+def save_payload(path: str, payload: dict) -> None:
+    """Atomic JSON write (tmp + os.replace) of a baseline payload."""
     d = os.path.dirname(os.path.abspath(path))
     fd, tmp = tempfile.mkstemp(dir=d, prefix=".higgslint-", suffix=".tmp")
     try:
@@ -52,6 +61,48 @@ def save_baseline(path: str, findings: Iterable[Finding]) -> None:
         if os.path.exists(tmp):
             os.unlink(tmp)
         raise
+
+
+def entries_from_keys(keys: collections.Counter) -> list[dict]:
+    """Expand a count-aware key Counter back into sorted entry dicts."""
+    out = []
+    for (p, rule, message), n in sorted(keys.items()):
+        out.extend({"path": p, "rule": rule, "message": message}
+                   for _ in range(n))
+    return out
+
+
+def save_baseline(path: str, findings: Iterable[Finding],
+                  extra: dict | None = None) -> None:
+    """Write ``findings`` as a baseline, atomically (tmp + os.replace).
+    ``extra`` merges additional top-level sections into the payload."""
+    entries = [
+        {"path": f.path, "rule": f.rule, "message": f.message}
+        for f in sorted(findings,
+                        key=lambda f: (f.path, f.rule, f.message))
+    ]
+    payload = {"version": BASELINE_VERSION, "entries": entries}
+    if extra:
+        payload.update(extra)
+    save_payload(path, payload)
+
+
+def prune_stale(path: str, findings: Iterable[Finding]) -> int:
+    """Rewrite ``path`` keeping only baseline entries that still match a
+    current finding (count-aware), preserving any extra payload sections.
+    Returns the number of stale entries dropped — baselines can only
+    shrink this way, never grow."""
+    payload = load_payload(path)
+    baseline = counter_from_payload(payload)
+    current = collections.Counter(f.baseline_key() for f in findings)
+    kept = collections.Counter()
+    for key, n in baseline.items():
+        kept[key] = min(n, current.get(key, 0))
+    n_stale = sum(baseline.values()) - sum(kept.values())
+    if n_stale:
+        payload["entries"] = entries_from_keys(kept)
+        save_payload(path, payload)
+    return n_stale
 
 
 def apply_baseline(findings: list[Finding],

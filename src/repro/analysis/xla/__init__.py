@@ -1,0 +1,25 @@
+"""higgsxla: compiled-path static analyzer for the HIGGS hot paths.
+
+Where higgslint (``repro.analysis``) checks *source* invariants, this
+package checks what XLA actually compiles: every registered hot-path
+entry point is traced over a declared corpus of representative shapes
+and the resulting jaxpr + optimized HLO are held against rules
+
+  X1  host<->device transfer sites (implicit numpy materialization,
+      callbacks in compiled bodies, eager production launches)
+  X2  recompile hazards (compile-cache keys beyond the declared
+      bucketing contract, weak-type python-scalar churn)
+  X3  dtype discipline (silent same-kind upcasts, f64/x64 leaks)
+  X4  structural anti-patterns (gather/dynamic-slice in while bodies,
+      degenerate dots, zero-flop layout fusions, unknown trip counts)
+  X5  cost-model drift (per-case flops/bytes vs committed values)
+
+Findings land in a count-aware committed baseline
+(``higgsxla-baseline.json``, same machinery as higgslint's) whose extra
+payload sections carry the transfer/recompile *budgets* and per-case
+cost references; CI fails on unbaselined findings or budget regressions.
+
+CLI: ``python -m repro.analysis.xla [--check|--write-baseline|...]``.
+This module stays import-light (no jax) so the registry can be consulted
+without initializing a backend.
+"""

@@ -1,0 +1,166 @@
+"""higgsxla CLI: ``python -m repro.analysis.xla [--check ...]``.
+
+Traces the registered hot-path corpus, evaluates rules X1-X5 against
+the committed baseline (``higgsxla-baseline.json``) and compares the
+measured transfer/recompile budgets against the committed ones.  Exit
+codes mirror higgslint: 0 clean, 1 findings or budget regressions,
+2 usage/baseline errors.
+"""
+from __future__ import annotations
+
+import argparse
+import collections
+import os
+import sys
+
+from repro.analysis import report
+
+DEFAULT_BASELINE = "higgsxla-baseline.json"
+
+
+def _render(f) -> str:
+    return f"{f.path}: [{f.rule}] {f.message}"
+
+
+def _json_payload(artifacts, findings, budgets) -> dict:
+    cases = []
+    for a in artifacts:
+        cases.append({
+            "entry": a.entry.name, "case": a.case.label,
+            "cache_key": a.cache_key, "h2d_bytes": a.h2d_bytes,
+            "d2h_bytes": a.d2h_bytes, "host_operands": a.host_operands,
+            "flops": a.flops, "bytes_accessed": a.bytes_accessed,
+            "unknown_trip_counts": a.unknown_trip_counts,
+            "structural": [s["kind"] for s in a.structural],
+            "error_kind": a.error_kind, "error": a.error,
+        })
+    return {"cases": cases, "budgets": budgets,
+            "findings": [{"rule": f.rule, "entry": f.path,
+                          "message": f.message} for f in findings]}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.xla",
+        description="HIGGS compiled-path analyzer (rules X1-X5)")
+    ap.add_argument("--check", action="store_true",
+                    help="explicit alias for the default check mode")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"baseline JSON (default: {DEFAULT_BASELINE})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings + budgets + per-case "
+                         "cost references and exit 0")
+    ap.add_argument("--prune-baseline", action="store_true",
+                    help="rewrite the baseline dropping entries that no "
+                         "longer match a finding (baselines only shrink)")
+    ap.add_argument("--fail-stale", action="store_true",
+                    help="exit 1 when stale baseline entries remain")
+    ap.add_argument("--entries", default="",
+                    help="comma-separated entry-name substring filter "
+                         "(budget gating is skipped when filtering)")
+    ap.add_argument("--include-heavy", action="store_true",
+                    help="also trace the heavy LM step entries "
+                         "(report-only: budgets are not gated)")
+    ap.add_argument("--plugin", action="append", default=[],
+                    help="python file registering extra entry points")
+    ap.add_argument("--json", dest="json_out", default="",
+                    help="write the full trace report to this path")
+    ap.add_argument("--cost-tolerance", type=float, default=0.25,
+                    help="relative X5 drift tolerance (default 0.25)")
+    args = ap.parse_args(argv)
+
+    # defer jax-heavy imports past --help
+    from repro.analysis.xla import registry, rules, trace
+
+    registry.load_builtin()
+    for path in args.plugin:
+        try:
+            registry.load_plugin(path)
+        except FileNotFoundError:
+            print(f"higgsxla: plugin not found: {path}", file=sys.stderr)
+            return 2
+    names = [s for s in args.entries.split(",") if s]
+    entries = registry.entry_points(names,
+                                    include_heavy=args.include_heavy)
+    if not entries:
+        print("higgsxla: no entry points selected", file=sys.stderr)
+        return 2
+    # a partial corpus cannot be compared against whole-corpus budgets
+    full_corpus = not names and not args.include_heavy and not args.plugin
+
+    payload: dict = {}
+    if os.path.exists(args.baseline):
+        try:
+            payload = report.load_payload(args.baseline)
+        except (ValueError, KeyError, TypeError) as e:
+            print(f"higgsxla: bad baseline: {e}", file=sys.stderr)
+            return 2
+    elif args.baseline != DEFAULT_BASELINE and not args.write_baseline:
+        print(f"higgsxla: baseline not found: {args.baseline}",
+              file=sys.stderr)
+        return 2
+
+    artifacts = trace.trace_entries(entries)
+    costs = None if args.write_baseline else payload.get("costs")
+    findings = rules.check(artifacts, costs=costs,
+                           tolerance=args.cost_tolerance)
+    budgets = rules.measured_budgets(artifacts)
+
+    if args.write_baseline:
+        extra = {"budgets": budgets,
+                 "costs": rules.measured_costs(artifacts)}
+        report.save_baseline(args.baseline, findings, extra=extra)
+        print(f"higgsxla: wrote {len(findings)} entr"
+              f"{'y' if len(findings) == 1 else 'ies'} + budgets to "
+              f"{args.baseline}")
+        return 0
+
+    if args.prune_baseline:
+        if not os.path.exists(args.baseline):
+            print(f"higgsxla: baseline not found: {args.baseline}",
+                  file=sys.stderr)
+            return 2
+        n_pruned = report.prune_stale(args.baseline, findings)
+        print(f"higgsxla: pruned {n_pruned} stale entr"
+              f"{'y' if n_pruned == 1 else 'ies'} from {args.baseline}")
+        return 0
+
+    baseline = report.counter_from_payload(payload) if payload else \
+        collections.Counter()
+    new, n_baselined, n_stale = report.apply_baseline(findings, baseline)
+
+    violations, ratchets = [], []
+    committed = payload.get("budgets")
+    if committed and full_corpus:
+        violations, ratchets = rules.check_budgets(budgets, committed)
+
+    for f in new:
+        print(_render(f))
+    n_cases = len(artifacts)
+    print(f"higgsxla: {len(new)} new finding(s) over {len(entries)} "
+          f"entry point(s) / {n_cases} case(s) "
+          f"({n_baselined} baselined)")
+    for msg in violations:
+        print(f"higgsxla: {msg}", file=sys.stderr)
+    for msg in ratchets:
+        print(f"higgsxla: note: {msg}")
+    if n_stale:
+        print(f"higgsxla: warning: {n_stale} stale baseline entr"
+              f"{'y' if n_stale == 1 else 'ies'} — run --prune-baseline",
+              file=sys.stderr)
+
+    if args.json_out:
+        d = os.path.dirname(args.json_out)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        report.save_payload(args.json_out,
+                            _json_payload(artifacts, findings, budgets))
+
+    rc = 1 if new or violations else 0
+    if args.fail_stale and n_stale:
+        rc = rc or 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,54 @@
+"""Shared lower -> compile -> report path for jitted entry points.
+
+One implementation of the "lower it, compile it, pull memory/cost/HLO
+structure out of it" block that used to be hand-rolled per call site
+(dryrun's three step kinds) and is now also the backbone of the
+higgsxla tracer: both consume :func:`compiled_report` so the record
+schema (memory, cost, hlo_flops, collectives, roofline,
+unknown_trip_counts) stays identical everywhere it is written.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.launch import hlo_analysis
+
+_MEMORY_FIELDS = ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes")
+_COST_FIELDS = ("flops", "bytes accessed", "transcendentals",
+                "utilization operand")
+
+
+def jit_entry(fn, *, static_argnames: tuple[str, ...] = (), **jit_kwargs):
+    """jit ``fn`` unless it is already a jit wrapper (has .trace/.lower),
+    in which case its own static_argnames already apply."""
+    if hasattr(fn, "trace") and hasattr(fn, "lower"):
+        return fn
+    if static_argnames:
+        jit_kwargs["static_argnames"] = static_argnames
+    return jax.jit(fn, **jit_kwargs)
+
+
+def compiled_report(lowered) -> tuple[dict, str]:
+    """Compile a ``jax.stages.Lowered`` and return (record, optimized
+    HLO text).  The record carries XLA's own memory/cost analyses plus
+    the structural HLO scan (trip-count-scaled flops/bytes/collectives
+    and the roofline terms)."""
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    record = {"memory": {k: int(getattr(mem, k, 0) or 0)
+                         for k in _MEMORY_FIELDS}}
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else (cost or {})
+    record["cost"] = {k: float(v) for k, v in cost.items()
+                      if isinstance(v, (int, float)) and k in _COST_FIELDS}
+    hlo = compiled.as_text()
+    struct = hlo_analysis.analyze(hlo)
+    record["hlo_flops"] = struct["flops"]
+    record["hlo_bytes_accessed"] = struct["bytes"]
+    record["collectives"] = struct["collectives"]
+    record["unknown_trip_counts"] = struct["unknown_trip_counts"]
+    record["roofline"] = hlo_analysis.roofline_terms(struct)
+    record["hlo_bytes"] = len(hlo)
+    return record, hlo

@@ -1,0 +1,129 @@
+"""Entry-point registry and shape-corpus declarations for higgsxla.
+
+Hot-path modules declare their own trace corpora next to the code they
+exercise via a module-level ``xla_entry_points()`` hook returning
+:class:`EntryPoint` objects; :func:`load_builtin` imports the hook
+modules and registers everything.  Declarations are *lazy*: an
+``EntryPoint.build`` thunk constructs the traced function, its static
+argnames and the :class:`TraceCase` list only when the analyzer runs,
+so importing this module never touches jax.
+
+``host_args`` indexes the positional operands that are materialized
+from host memory at the production call site — that inventory is what
+the transfer budget (and the ROADMAP device-resident refactor) ratchets.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import importlib
+import importlib.util
+from typing import Callable, Iterator
+
+#: modules consulted by :func:`load_builtin` for ``xla_entry_points()``
+BUILTIN_HOOK_MODULES = (
+    "repro.kernels.ops",
+    "repro.api.planner",
+    "repro.launch.steps",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceCase:
+    """One representative shape assignment for an entry point."""
+    label: str
+    args: tuple
+    kwargs: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryPoint:
+    """One registered hot-path function plus its declared contracts.
+
+    ``build()`` -> (fn, static_argnames, cases); ``fn`` may already be
+    jit-wrapped (its own static_argnames then apply and the returned
+    tuple's are ignored by the tracer).
+    """
+    name: str
+    build: Callable[[], tuple[Callable, tuple[str, ...], list[TraceCase]]]
+    host_args: tuple[int, ...] = ()
+    fetch_output: bool = True          # production copies the result back
+    jit_in_production: bool = True     # False = eager launch (X1 finding)
+    expected_compile_keys: int | None = None   # declared bucketing budget
+    allow_python_scalars: bool = False
+    allow_f64: bool = False
+    allow_upcasts: bool = False        # mixed-precision entries (LM steps)
+    tags: frozenset = frozenset()      # {"interpret", "heavy", ...}
+
+    @property
+    def heavy(self) -> bool:
+        return "heavy" in self.tags
+
+    @property
+    def interpret(self) -> bool:
+        return "interpret" in self.tags
+
+
+_REGISTRY: dict[str, EntryPoint] = {}
+_builtin_loaded = False
+
+
+def register(ep: EntryPoint) -> EntryPoint:
+    """Register (or replace, by name) one entry point."""
+    _REGISTRY[ep.name] = ep
+    return ep
+
+
+def entry_points(names: list[str] | None = None, *,
+                 include_heavy: bool = False) -> list[EntryPoint]:
+    """Registered entries sorted by name.  ``names`` filters by
+    substring match; heavy entries are excluded unless asked for."""
+    out = []
+    for name in sorted(_REGISTRY):
+        ep = _REGISTRY[name]
+        if ep.heavy and not include_heavy:
+            continue
+        if names and not any(pat in name for pat in names):
+            continue
+        out.append(ep)
+    return out
+
+
+def load_builtin() -> None:
+    """Import the hook modules and register their declared corpora.
+    Idempotent: re-registration overwrites by name."""
+    global _builtin_loaded
+    for modname in BUILTIN_HOOK_MODULES:
+        mod = importlib.import_module(modname)
+        hook = getattr(mod, "xla_entry_points", None)
+        if hook is None:
+            continue
+        for ep in hook():
+            register(ep)
+    _builtin_loaded = True
+
+
+_plugin_count = 0
+
+
+def load_plugin(path: str) -> None:
+    """Execute a python file that registers extra entry points (tests
+    seed synthetic regressions this way via ``--plugin``)."""
+    global _plugin_count
+    _plugin_count += 1
+    spec = importlib.util.spec_from_file_location(
+        f"higgsxla_plugin_{_plugin_count}", path)
+    if spec is None or spec.loader is None:
+        raise FileNotFoundError(path)
+    spec.loader.exec_module(importlib.util.module_from_spec(spec))
+
+
+@contextlib.contextmanager
+def temporary() -> Iterator[None]:
+    """Snapshot/restore the registry around a test block."""
+    saved = dict(_REGISTRY)
+    try:
+        yield
+    finally:
+        _REGISTRY.clear()
+        _REGISTRY.update(saved)

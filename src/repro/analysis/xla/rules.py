@@ -1,0 +1,164 @@
+"""Rule evaluation (X1-X5) over trace artifacts.
+
+Findings reuse higgslint's :class:`~repro.analysis.walker.Finding` with
+``path`` = entry-point name, so the count-aware ``(path, rule, message)``
+baseline machinery applies unchanged.  Messages avoid volatile detail
+(HLO computation names, full tracebacks) so baseline entries survive
+unrelated recompiles.
+"""
+from __future__ import annotations
+
+from repro.analysis.walker import Finding
+from repro.analysis.xla.trace import Artifact
+
+
+def _f(rule: str, entry: str, message: str) -> Finding:
+    return Finding(rule, entry, 0, 0, message)
+
+
+def cost_key(art: Artifact) -> str:
+    return f"{art.entry.name}/{art.case.label}"
+
+
+def measured_costs(artifacts: list[Artifact]) -> dict:
+    """Per-case committed-cost reference section for the baseline."""
+    return {cost_key(a): {"flops": a.flops,
+                          "bytes_accessed": a.bytes_accessed}
+            for a in artifacts if a.error_kind is None}
+
+
+def measured_budgets(artifacts: list[Artifact]) -> dict:
+    """Aggregate transfer/recompile budget over the whole corpus — the
+    numbers the device-resident refactor ratchets toward zero."""
+    ok = [a for a in artifacts if a.error_kind is None]
+    keys_by_entry: dict[str, set] = {}
+    for a in ok:
+        keys_by_entry.setdefault(a.entry.name, set()).add(a.cache_key)
+    return {
+        "h2d_bytes": sum(a.h2d_bytes for a in ok),
+        "d2h_bytes": sum(a.d2h_bytes for a in ok),
+        "host_transfer_sites": sum(
+            a.host_operands + (1 if a.entry.fetch_output else 0)
+            for a in ok),
+        "compile_cache_keys": sum(len(v) for v in keys_by_entry.values()),
+    }
+
+
+def check_budgets(measured: dict, committed: dict) -> tuple[list, list]:
+    """(violations, ratchets): measured > committed fails the build;
+    measured < committed is the prompt to shrink the committed number."""
+    violations, ratchets = [], []
+    for k in sorted(committed):
+        m, c = measured.get(k, 0), committed[k]
+        if m > c:
+            violations.append(
+                f"budget {k}: measured {m} exceeds committed {c}")
+        elif m < c:
+            ratchets.append(
+                f"budget {k}: measured {m} below committed {c} — "
+                f"ratchet the baseline down (--write-baseline)")
+    return violations, ratchets
+
+
+def check(artifacts: list[Artifact], *, costs: dict | None = None,
+          tolerance: float = 0.25) -> list[Finding]:
+    findings: list[Finding] = []
+    by_entry: dict[str, list[Artifact]] = {}
+    for a in artifacts:
+        by_entry.setdefault(a.entry.name, []).append(a)
+
+    for name in sorted(by_entry):
+        arts = by_entry[name]
+        entry = arts[0].entry
+
+        # X1: production launches this path eagerly — per-op dispatch
+        if not entry.jit_in_production:
+            findings.append(_f("X1", name,
+                               "entry executes eagerly (unjitted) in "
+                               "production: every launch pays per-op "
+                               "dispatch and transfer"))
+
+        # X2: compile-cache keys beyond the declared bucketing contract
+        keys = {a.cache_key for a in arts if a.error_kind is None}
+        if (entry.expected_compile_keys is not None
+                and len(keys) > entry.expected_compile_keys):
+            findings.append(_f("X2", name,
+                               f"shape corpus produces {len(keys)} "
+                               f"compile-cache keys, exceeding the "
+                               f"declared bucketing budget of "
+                               f"{entry.expected_compile_keys}"))
+
+        for a in arts:
+            lbl = a.case.label
+            if a.error_kind == "host_materialization":
+                findings.append(_f("X1", name,
+                                   f"case {lbl}: host materialization "
+                                   f"inside traced body "
+                                   f"({(a.error or '').split(':')[0]})"))
+                continue
+            if a.error_kind:
+                findings.append(_f("X1", name,
+                                   f"case {lbl}: trace failed "
+                                   f"({(a.error or '').split(':')[0]})"))
+                continue
+            for prim in a.callback_prims:
+                findings.append(_f("X1", name,
+                                   f"case {lbl}: {prim} host round-trip "
+                                   f"in compiled body"))
+            for tgt in a.hlo_callbacks:
+                findings.append(_f("X1", name,
+                                   f"case {lbl}: custom-call {tgt} in "
+                                   f"optimized HLO"))
+            if a.python_scalars and not entry.allow_python_scalars:
+                findings.append(_f("X2", name,
+                                   f"case {lbl}: {a.python_scalars} "
+                                   f"python-scalar operand(s) — "
+                                   f"weak-type compile-cache churn"))
+            if not entry.allow_upcasts:
+                for src, dst in a.upcasts:
+                    findings.append(_f("X3", name,
+                                       f"case {lbl}: silent upcast "
+                                       f"{src}->{dst} in compiled body"))
+            if (a.f64_avals or a.hlo_f64) and not entry.allow_f64:
+                findings.append(_f("X3", name,
+                                   f"case {lbl}: float64 in compiled "
+                                   f"program (x64 leak)"))
+            kinds: dict[str, int] = {}
+            for s in a.structural:
+                kind = s["kind"]
+                if kind == "dynamic_slice_in_while" and entry.interpret:
+                    # pallas interpret streams the grid via dynamic-slice;
+                    # not representative of the Mosaic lowering
+                    continue
+                kinds[kind] = kinds.get(kind, 0) + 1
+            for kind in sorted(kinds):
+                cnt = kinds[kind]
+                findings.append(_f("X4", name,
+                                   f"case {lbl}: {kind} "
+                                   f"({cnt} site(s))"))
+            if a.unknown_trip_counts:
+                findings.append(_f("X4", name,
+                                   f"case {lbl}: {a.unknown_trip_counts} "
+                                   f"while loop(s) with unknown trip "
+                                   f"count in optimized HLO"))
+            if costs is not None:
+                ref = costs.get(cost_key(a))
+                if ref is None:
+                    findings.append(_f("X5", name,
+                                       f"case {lbl}: no committed cost "
+                                       f"reference (--write-baseline)"))
+                    continue
+                for metric, measured in (("flops", a.flops),
+                                         ("bytes_accessed",
+                                          a.bytes_accessed)):
+                    want = int(ref.get(metric, 0))
+                    if want == measured == 0:
+                        continue
+                    drift = abs(measured - want) / max(abs(want), 1)
+                    if drift > tolerance:
+                        findings.append(_f("X5", name,
+                                           f"case {lbl}: {metric} "
+                                           f"{measured} drifted "
+                                           f"{drift:.0%} from committed "
+                                           f"{want}"))
+    return findings

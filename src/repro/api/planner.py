@@ -260,3 +260,80 @@ class QueryPlanner:
                 (rec[bk][None, :] == base[:, None]) & tok[None, :]
             out += (m * rec["w"][None, :]).sum(axis=1)
         return out
+
+
+# ---------------------------------------------------------------------------
+# higgsxla shape corpus: the production probe launches
+# ---------------------------------------------------------------------------
+#
+# ``_probe_level_edge``/``_probe_level_vertex`` call ``cmatrix.probe_edge``
+# / ``probe_vertex`` UNJITTED (eager per-op dispatch) over a pool gather
+# that pow2-pads the node count (``_pow2_pad(len(ids))``), with np.uint32
+# time scalars and an ``np.asarray`` output fetch.  The corpus traces the
+# jitted form of exactly those shapes so the analyzer can inventory the
+# per-launch transfer bytes; ``jit_in_production=False`` records the
+# eager launch itself as a baselined X1 finding that the device-resident
+# refactor (see ROADMAP) is expected to retire.
+
+def xla_entry_points():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.xla.registry import EntryPoint, TraceCase
+    from repro.core.cmatrix import NodeState
+    from repro.core.params import HiggsParams
+
+    p = HiggsParams()
+    r, b = p.r, p.b
+    u32, f32 = jnp.uint32, jnp.float32
+
+    def sds(shape, dt):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    def nodes(m, d):
+        shp = (m, d, d, b)
+        return NodeState(sds(shp, u32), sds(shp, u32), sds(shp, f32),
+                         sds(shp, u32), sds(shp, u32))
+
+    def edge_args(m, q, d):
+        return (nodes(m, d), sds((m,), jnp.bool_), sds((q,), u32),
+                sds((q,), u32), sds((q, r), u32), sds((q, r), u32),
+                sds((), u32), sds((), u32))
+
+    def build_edge():
+        d1, d2 = p.d1, p.d(2)
+        cases = [
+            # two pow2 gather buckets at level 1 + one level-2 shape:
+            # three declared compile keys for the plan-level launches
+            TraceCase("L1_m8_q16", edge_args(8, 16, d1),
+                      {"match_time": False}),
+            TraceCase("L1_m16_q16", edge_args(16, 16, d1),
+                      {"match_time": False}),
+            TraceCase("L2_m8_q16", edge_args(8, 16, d2),
+                      {"match_time": False}),
+            # the filtered re-probe at level 1 (distinct static arg)
+            TraceCase("L1_m8_q16_filtered", edge_args(8, 16, d1),
+                      {"match_time": True}),
+        ]
+        return cmatrix.probe_edge, ("match_time",), cases
+
+    def build_vertex():
+        d1 = p.d1
+        args = (nodes(8, d1), sds((8,), jnp.bool_), sds((16,), u32),
+                sds((16, r), u32), sds((), u32), sds((), u32))
+        cases = [
+            TraceCase("L1_m8_q16_out", args,
+                      {"direction": "out", "match_time": False}),
+            TraceCase("L1_m8_q16_in", args,
+                      {"direction": "in", "match_time": False}),
+        ]
+        return cmatrix.probe_vertex, ("direction", "match_time"), cases
+
+    return [
+        EntryPoint("planner.edge_probe", build_edge,
+                   host_args=tuple(range(8)), fetch_output=True,
+                   jit_in_production=False, expected_compile_keys=4),
+        EntryPoint("planner.vertex_probe", build_vertex,
+                   host_args=tuple(range(6)), fetch_output=True,
+                   jit_in_production=False, expected_compile_keys=2),
+    ]

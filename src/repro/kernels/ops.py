@@ -101,3 +101,148 @@ def vertex_probe_stacked(nodes: NodeState, node_mask, fv, rows, ts, te, *,
                                     match_time=match_time)
 
     return jax.vmap(one)(nodes, node_mask)
+
+
+# ---------------------------------------------------------------------------
+# higgsxla shape corpus (compiled-path analyzer entry points)
+# ---------------------------------------------------------------------------
+#
+# Each kernel wrapper above declares representative trace shapes here;
+# ``python -m repro.analysis.xla`` traces them and gates transfer /
+# recompile / dtype / structure / cost budgets in CI.  Shapes mirror the
+# production callers: drains pow2-pad the chunk axis (lo=64) and the
+# jitted backends pow2-pad the leaf axis (higgs._close_leaves_batched),
+# so ONE compile key per pow2 bucket is the declared contract
+# (``expected_compile_keys``).  ``host_args`` marks operands that are
+# materialized from host numpy at the call site — the transfer budget
+# the ROADMAP device-resident refactor ratchets toward zero.
+
+def xla_entry_points():
+    import jax.numpy as jnp
+
+    from repro.analysis.xla.registry import EntryPoint, TraceCase
+    from repro.core import cmatrix
+    from repro.core.params import HiggsParams
+
+    p = HiggsParams()
+    d, b, r, n = p.d1, p.b, p.r, 1024
+    u32, i32, f32 = jnp.uint32, jnp.int32, jnp.float32
+
+    def sds(shape, dt):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    def node(lead=()):
+        shp = (*lead, d, d, b)
+        return NodeState(sds(shp, u32), sds(shp, u32), sds(shp, f32),
+                         sds(shp, u32), sds(shp, u32))
+
+    def chunk(lead=()):
+        vec = (*lead, n)
+        return (sds(vec, u32), sds(vec, u32), sds((*vec, r), u32),
+                sds((*vec, r), u32), sds(vec, f32), sds(vec, u32),
+                sds(vec, jnp.bool_))
+
+    def build_leaf_insert():
+        cases = [TraceCase("d16_n1024", (node(), *chunk()),
+                           {"r": r, "interpret": True})]
+        return leaf_insert, ("r", "interpret"), cases
+
+    def build_leaf_insert_batched():
+        # two pow2 leaf-axis buckets = two declared compile keys
+        cases = [TraceCase(f"L{L}_n{n}", (node((L,)), *chunk((L,))),
+                           {"r": r, "interpret": True}) for L in (4, 8)]
+        return leaf_insert_batched, ("r", "interpret"), cases
+
+    def probe_args(m, q):
+        return (node((m,)), sds((m,), jnp.bool_), sds((q,), u32),
+                sds((q,), u32), sds((q, r), u32), sds((q, r), u32),
+                sds((), u32), sds((), u32))
+
+    def build_edge_probe():
+        cases = [
+            TraceCase("m8_q16", probe_args(8, 16),
+                      {"match_time": False, "interpret": True}),
+            TraceCase("m8_q16_filtered", probe_args(8, 16),
+                      {"match_time": True, "interpret": True}),
+        ]
+        return edge_probe, ("match_time", "interpret"), cases
+
+    def build_vertex_probe():
+        m, q = 8, 16
+        args = (node((m,)), sds((m,), jnp.bool_), sds((q,), u32),
+                sds((q, r), u32), sds((), u32), sds((), u32))
+        cases = [TraceCase("m8_q16_out", args,
+                           {"direction": "out", "match_time": True,
+                            "interpret": True})]
+        return vertex_probe, ("direction", "match_time", "interpret"), cases
+
+    def build_edge_probe_stacked():
+        S, m, q = 4, 8, 16
+        args = (node((S, m)), sds((S, m), jnp.bool_), sds((q,), u32),
+                sds((q,), u32), sds((q, r), u32), sds((q, r), u32),
+                sds((), u32), sds((), u32))
+        cases = [TraceCase("S4_m8_q16", args, {"match_time": True})]
+        return edge_probe_stacked, ("match_time",), cases
+
+    def build_vertex_probe_stacked():
+        S, m, q = 4, 8, 16
+        args = (node((S, m)), sds((S, m), jnp.bool_), sds((q,), u32),
+                sds((q, r), u32), sds((), u32), sds((), u32))
+        cases = [TraceCase("S4_m8_q16_in", args,
+                           {"direction": "in", "match_time": True})]
+        return vertex_probe_stacked, ("direction", "match_time"), cases
+
+    def build_insert_chunks_vector():
+        pv = HiggsParams(insert_backend="vector")
+        L = 4
+        args = (sds((L, n), u32), sds((L, n), u32), sds((L, n, r), u32),
+                sds((L, n, r), u32), sds((L, n), f32), sds((L, n), u32),
+                sds((L, n), jnp.bool_), sds((L, n), i32),
+                sds((L, n), jnp.bool_), sds((L, r * r, n), i32))
+        cases = [TraceCase("L4_n1024", args, {"params": pv})]
+        return cmatrix.insert_chunks_pre, ("params",), cases
+
+    def build_aggregate_children_vector():
+        pv = HiggsParams(insert_backend="vector")
+        m, N = 4, 256
+        args = (sds((m, N), u32), sds((m, N), u32), sds((m, N, r), u32),
+                sds((m, N, r), u32), sds((m, N), f32),
+                sds((m, N), jnp.bool_), sds((m, r * r, N), i32))
+        cases = [TraceCase("m4_N256_l1", args, {"params": pv, "level": 1})]
+        return cmatrix.aggregate_children_pre, ("params", "level"), cases
+
+    interp = frozenset({"interpret"})
+    return [
+        # pallas leaf insertion: chunks arrive as host numpy (w/t/valid;
+        # hashes transfer upstream of the fs/rows device precompute)
+        EntryPoint("kernels.leaf_insert", build_leaf_insert,
+                   host_args=(5, 6, 7), fetch_output=True,
+                   expected_compile_keys=1, tags=interp),
+        EntryPoint("kernels.leaf_insert_batched", build_leaf_insert_batched,
+                   host_args=(5, 6, 7), fetch_output=True,
+                   expected_compile_keys=2, tags=interp),
+        EntryPoint("kernels.edge_probe", build_edge_probe,
+                   host_args=tuple(range(8)), fetch_output=True,
+                   expected_compile_keys=2, tags=interp),
+        EntryPoint("kernels.vertex_probe", build_vertex_probe,
+                   host_args=tuple(range(6)), fetch_output=True,
+                   expected_compile_keys=1, tags=interp),
+        # stacked-shard probes: pools are device-placed (place_stacked);
+        # only query coords + scalars cross per launch
+        EntryPoint("kernels.edge_probe_stacked", build_edge_probe_stacked,
+                   host_args=(2, 3, 4, 5, 6, 7), fetch_output=True,
+                   expected_compile_keys=1),
+        EntryPoint("kernels.vertex_probe_stacked",
+                   build_vertex_probe_stacked,
+                   host_args=(2, 3, 4, 5), fetch_output=True,
+                   expected_compile_keys=1),
+        # vector insert backend: every operand is jnp.asarray'd from host
+        EntryPoint("kernels.insert_chunks_vector",
+                   build_insert_chunks_vector,
+                   host_args=tuple(range(10)), fetch_output=True,
+                   expected_compile_keys=1),
+        EntryPoint("kernels.aggregate_children_vector",
+                   build_aggregate_children_vector,
+                   host_args=tuple(range(7)), fetch_output=True,
+                   expected_compile_keys=1),
+    ]

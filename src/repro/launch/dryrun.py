@@ -186,7 +186,10 @@ def main():
     pspec = tfm.params_pspec(cfg, scfg, tp_size)
     psharding = specs_lib.named(mesh, pspec)
 
-    t0 = time.time()
+    # build (step, jit kwargs, lower args) per kind, then go through the
+    # ONE shared jit/lower/compile/report path in repro.analysis.xla
+    # (imported late: jax is initialized after the XLA_FLAGS line above)
+    from repro.analysis.xla import lowering
     if kind == "train":
         opt = AdamW()
         opt_shapes = jax.eval_shape(lambda p: opt.init(p), params_shapes)
@@ -195,30 +198,32 @@ def main():
         step = make_train_step(cfg, scfg, mesh, opt, num_microbatches=mb,
                                grad_dtype=grad_dtype,
                                bf16_params="bf16params" in opts)
-        jitted = jax.jit(
-            step,
+        jit_kwargs = dict(
             in_shardings=(psharding, osharding,
                           specs_lib.named(mesh, in_specs)),
             out_shardings=(psharding, osharding, None),
             donate_argnums=(0, 1))
-        lowered = jitted.lower(params_shapes, opt_shapes, inputs)
+        lower_args = (params_shapes, opt_shapes, inputs)
     elif kind == "prefill":
         step = make_prefill_step(cfg, scfg, mesh)
-        jitted = jax.jit(step, in_shardings=(psharding,
-                                             specs_lib.named(mesh, in_specs)))
-        lowered = jitted.lower(params_shapes, inputs)
+        jit_kwargs = dict(
+            in_shardings=(psharding, specs_lib.named(mesh, in_specs)))
+        lower_args = (params_shapes, inputs)
     else:
         step = make_decode_step(cfg, scfg, mesh)
         cache_sharding = specs_lib.named(mesh, in_specs["cache"])
-        jitted = jax.jit(
-            step,
+        jit_kwargs = dict(
             in_shardings=(psharding,
                           {"token": specs_lib.named(mesh, in_specs["token"]),
                            "cache": cache_sharding,
                            "cache_len": NamedSharding(mesh, P())}),
             out_shardings=(None, cache_sharding),
             donate_argnums=(1,))     # donate the KV cache (in-place update)
-        lowered = jitted.lower(params_shapes, inputs)
+        lower_args = (params_shapes, inputs)
+
+    t0 = time.time()
+    jitted = lowering.jit_entry(step, **jit_kwargs)
+    lowered = jitted.lower(*lower_args)
     t_lower = time.time() - t0
 
     record = {
@@ -230,28 +235,9 @@ def main():
     }
     if not args.skip_compile:
         t0 = time.time()
-        compiled = lowered.compile()
+        rec, _hlo = lowering.compiled_report(lowered)
         record["compile_s"] = round(time.time() - t0, 1)
-        mem = compiled.memory_analysis()
-        record["memory"] = {
-            k: int(getattr(mem, k, 0)) for k in
-            ("argument_size_in_bytes", "output_size_in_bytes",
-             "temp_size_in_bytes", "generated_code_size_in_bytes",
-             "alias_size_in_bytes")}
-        cost = compiled.cost_analysis()
-        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
-        record["cost"] = {k: float(v) for k, v in cost.items()
-                          if isinstance(v, (int, float)) and
-                          k in ("flops", "bytes accessed", "transcendentals",
-                                "utilization operand")}
-        hlo = compiled.as_text()
-        from repro.launch import hlo_analysis
-        struct = hlo_analysis.analyze(hlo)
-        record["hlo_flops"] = struct["flops"]
-        record["hlo_bytes_accessed"] = struct["bytes"]
-        record["collectives"] = struct["collectives"]
-        record["roofline"] = hlo_analysis.roofline_terms(struct)
-        record["hlo_bytes"] = len(hlo)
+        record.update(rec)
         record["status"] = "compiled"
 
     record["analytic_flops"] = analytic_flops(

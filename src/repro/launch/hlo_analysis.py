@@ -109,8 +109,21 @@ def _parse_computations(hlo: str) -> dict:
     return comps
 
 
-def _trip_count(cond: Computation) -> int:
-    """Extract the loop bound from compare-with-constant conditions."""
+#: LT/LE with the induction variable on the left count up from 0; a
+#: constant on the left flips the effective direction (c > iv == iv < c)
+_FLIP = {"LT": "GT", "LE": "GE", "GT": "LT", "GE": "LE"}
+
+
+def _trip_count(cond: Computation) -> tuple[int, bool]:
+    """Extract the loop bound from compare-with-constant conditions.
+
+    Returns ``(trips, known)``.  ``direction=LT`` (iv < c from 0 by 1)
+    gives c trips and LE gives c + 1; GT/GE conditions are count-down
+    loops whose bound lives in the loop *init*, invisible from the
+    condition computation alone — those return ``(1, False)`` so the
+    caller can surface an ``unknown_trip_count`` marker instead of
+    silently costing the body a single iteration.
+    """
     consts = {}
     for line in cond.lines:
         m = re.match(
@@ -121,15 +134,25 @@ def _trip_count(cond: Computation) -> int:
     for line in cond.lines:
         if "compare(" not in line:
             continue
-        args = _OPERAND_RE.findall(line.split("compare(", 1)[1])
-        for a in args:
-            if a in consts:
-                return consts[a]
+        dm = re.search(r"direction=([A-Z]+)", line)
+        direction = dm.group(1) if dm else "LT"
+        args = _OPERAND_RE.findall(line.split("compare(", 1)[1])[:2]
+        for pos, a in enumerate(args):
+            if a not in consts:
+                continue
+            if pos == 0:                 # constant on the lhs: flip
+                direction = _FLIP.get(direction, direction)
+            if direction == "LT":
+                return consts[a], True
+            if direction == "LE":
+                return consts[a] + 1, True
+            # GT/GE: bound is the init value, not the compare constant
+            return 1, False
     # conditions may delegate to a fused compare; look for constants in
     # the whole computation as a fallback
     if len(consts) == 1:
-        return next(iter(consts.values()))
-    return 1
+        return next(iter(consts.values())), True
+    return 1, False
 
 
 # ops whose outputs/operands do NOT stream HBM (metadata / aliasing)
@@ -142,9 +165,14 @@ def analyze(hlo: str) -> dict:
     comps = _parse_computations(hlo)
     entry = comps.get("__entry__")
     if entry is None:
-        return {"flops": 0.0, "bytes": 0.0, "collectives": {}}
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {},
+                "unknown_trip_counts": 0}
 
     memo: dict[str, tuple] = {}
+    # while conditions whose trip count could not be extracted — surfaced
+    # loudly (counted once per condition) instead of silently costing the
+    # body a single iteration
+    unknown_conds: set[str] = set()
 
     def line_operand_bytes(c: Computation, line: str) -> int:
         body = line.split("=", 1)[-1]
@@ -240,8 +268,12 @@ def analyze(hlo: str) -> dict:
             for k, v in c2.items():
                 colls[k] += v
         for body_name, cond_name in c.whiles:
-            trips = _trip_count(comps[cond_name]) \
-                if cond_name in comps else 1
+            if cond_name in comps:
+                trips, known = _trip_count(comps[cond_name])
+            else:
+                trips, known = 1, False
+            if not known:
+                unknown_conds.add(cond_name)
             f2, b2, c2 = comp_cost(body_name, stack + (name,))
             flops += f2 * trips
             nbytes += b2 * trips
@@ -251,7 +283,102 @@ def analyze(hlo: str) -> dict:
         return memo[name]
 
     flops, nbytes, colls = comp_cost(entry.name)
-    return {"flops": flops, "bytes": nbytes, "collectives": colls}
+    return {"flops": flops, "bytes": nbytes, "collectives": colls,
+            "unknown_trip_counts": len(unknown_conds)}
+
+
+def parse_computations(hlo: str) -> dict:
+    """Public handle on the per-computation call graph (the ``__entry__``
+    alias points at the ENTRY computation)."""
+    return _parse_computations(hlo)
+
+
+# layout-change ops that stream bytes without doing arithmetic — a fusion
+# made of nothing else is pure data movement
+_LAYOUT_OPS = ("transpose(", "copy(", "reshape(", "broadcast(", "concatenate(",
+               "pad(", "reverse(", "copy-start(")
+
+
+def _while_reachable(comps: dict) -> set:
+    """Names of computations transitively reachable from a while body
+    (fusions/calls included) — ops here execute once per iteration."""
+    roots = [body for c in comps.values() for body, _ in c.whiles]
+    seen: set[str] = set()
+    while roots:
+        name = roots.pop()
+        if name in seen or name not in comps:
+            continue
+        seen.add(name)
+        c = comps[name]
+        roots.extend(c.calls)
+        roots.extend(body for body, _ in c.whiles)
+    return seen
+
+
+def structural_findings(hlo: str, *,
+                        fusion_bytes_threshold: int = 1 << 20) -> list:
+    """Structural anti-patterns in optimized HLO (higgsxla rule X4).
+
+    Returns dicts with a stable ``kind`` + human ``detail``:
+
+    * ``gather_in_while`` / ``dynamic_slice_in_while`` — per-iteration
+      random access inside a loop body (the access pattern HBM hates);
+    * ``degenerate_dot`` — a dot whose contracting extent is 1 (a
+      broadcast-multiply wearing a matmul costume: flops misreported,
+      MXU wasted);
+    * ``zero_flop_layout_fusion`` — a called computation with no dots
+      whose output bytes are dominated by layout-change ops above
+      ``fusion_bytes_threshold`` (pure data movement worth fusing away).
+    """
+    comps = _parse_computations(hlo)
+    in_while = _while_reachable(comps)
+    out = []
+    for name, c in comps.items():
+        if name == "__entry__":
+            continue                     # alias of the ENTRY computation
+        layout_bytes = 0
+        has_dot = False
+        for line in c.lines:
+            body = line.split("=", 1)[-1]
+            head = line.split(", metadata")[0]
+            if name in in_while:
+                if "gather(" in body:
+                    out.append({"kind": "gather_in_while",
+                                "computation": name,
+                                "detail": "gather inside while body"})
+                if "dynamic-slice(" in head and \
+                        "dynamic-update-slice(" not in head:
+                    out.append({"kind": "dynamic_slice_in_while",
+                                "computation": name,
+                                "detail": "dynamic-slice inside while "
+                                          "body"})
+            if " dot(" in body or body.lstrip().startswith("dot("):
+                has_dot = True
+                k = 1
+                m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+                names = _OPERAND_RE.findall(line.split("dot(", 1)[1])
+                lhs_sh = c.symbols.get(names[0]) if names else None
+                if m and lhs_sh:
+                    for idx in m.group(1).split(","):
+                        if idx and int(idx) < len(lhs_sh[1]):
+                            k *= lhs_sh[1][int(idx)]
+                    if k == 1:
+                        out.append({"kind": "degenerate_dot",
+                                    "computation": name,
+                                    "detail": "dot with contracting "
+                                              "extent 1"})
+            if any(op in body for op in _LAYOUT_OPS):
+                dm = _DEF_RE.match(line)
+                sh = _shape_list(dm.group(2)) if dm else None
+                if sh:
+                    layout_bytes += _dims_prod(sh[0][1]) * _DTB[sh[0][0]]
+        called = any(name in cc.calls for cc in comps.values())
+        if called and not has_dot and layout_bytes >= fusion_bytes_threshold:
+            out.append({"kind": "zero_flop_layout_fusion",
+                        "computation": name,
+                        "detail": f"no-flop fusion moving "
+                                  f"{layout_bytes} layout bytes"})
+    return out
 
 
 def roofline_terms(analysis: dict, *, chips: int = 1,

@@ -83,3 +83,59 @@ def make_decode_step(cfg, scfg, mesh):
             cfg, scfg, mesh)
         return logits, cache
     return decode_step
+
+
+# ---------------------------------------------------------------------------
+# higgsxla shape corpus: the LM step functions (heavy)
+# ---------------------------------------------------------------------------
+#
+# Tagged "heavy": a reduced-config transformer still compiles for
+# seconds, so these are excluded from the default CI corpus and traced
+# only under ``python -m repro.analysis.xla --include-heavy`` (report
+# only; budgets are not gated).  Mixed precision is by design here
+# (``allow_upcasts``); params/opt state/batch stay device-resident in
+# production (``host_args=()``) and the loss dict is the only fetch.
+
+def xla_entry_points():
+    from repro.analysis.xla.registry import EntryPoint, TraceCase
+
+    def _reduced():
+        from repro import configs as cfglib
+        from repro.launch.mesh import make_local_mesh
+        from repro.models import transformer as tfm_
+        from repro.models.common import ShardCfg
+        cfg = cfglib.get_config("llama3-8b", reduced=True)
+        mesh = make_local_mesh()
+        scfg = ShardCfg(dp=("data",), tp="model", fsdp=None)
+        params = jax.eval_shape(
+            lambda: tfm_.init_params(jax.random.PRNGKey(0), cfg))
+        B, S = 2, 32
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        return cfg, scfg, mesh, params, batch
+
+    def build_train():
+        cfg, scfg, mesh, params, batch = _reduced()
+        opt = AdamW()
+        opt_state = jax.eval_shape(opt.init, params)
+        step = make_train_step(cfg, scfg, mesh, opt)
+        cases = [TraceCase("llama3_reduced_b2_s32",
+                           (params, opt_state, batch))]
+        return step, (), cases
+
+    def build_prefill():
+        cfg, scfg, mesh, params, batch = _reduced()
+        step = make_prefill_step(cfg, scfg, mesh)
+        cases = [TraceCase("llama3_reduced_b2_s32",
+                           (params, {"tokens": batch["tokens"]}))]
+        return step, (), cases
+
+    heavy = frozenset({"heavy"})
+    return [
+        EntryPoint("launch.train_step", build_train, host_args=(),
+                   fetch_output=False, expected_compile_keys=1,
+                   allow_upcasts=True, tags=heavy),
+        EntryPoint("launch.prefill_step", build_prefill, host_args=(),
+                   fetch_output=False, expected_compile_keys=1,
+                   allow_upcasts=True, tags=heavy),
+    ]

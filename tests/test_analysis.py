@@ -378,6 +378,60 @@ def test_baseline_stale_entries_warn_but_pass(tmp_path):
     assert "stale" in r.stdout
 
 
+def test_baseline_stale_entries_fail_under_fail_stale(tmp_path):
+    good = tmp_path / "fixed.py"
+    good.write_text("x = 1\n")
+    base = tmp_path / "base.json"
+    report.save_baseline(str(base),
+                         [Finding("R1", "fixed.py", 1, 1, "gone")])
+    r = cli(str(good), "--baseline", str(base), "--no-ruff",
+            "--fail-stale")
+    assert r.returncode == 1
+    assert "prune-baseline" in r.stderr
+
+
+def test_prune_baseline_drops_stale_keeps_live(tmp_path):
+    bad = tmp_path / "viol.py"
+    bad.write_text("import numpy as np\na = np.random.default_rng()\n")
+    base = tmp_path / "base.json"
+    # live entry (matches the finding) + a stale one for vanished code
+    r = cli(str(bad), "--baseline", str(base), "--write-baseline")
+    assert r.returncode == 0
+    payload = json.loads(base.read_text())
+    payload["entries"].append(
+        {"path": "gone.py", "rule": "R1", "message": "vanished"})
+    base.write_text(json.dumps(payload))
+    r = cli(str(bad), "--baseline", str(base), "--no-ruff",
+            "--prune-baseline")
+    assert r.returncode == 0
+    assert "pruned 1 stale" in r.stdout
+    kept = json.loads(base.read_text())["entries"]
+    assert len(kept) == 1 and kept[0]["path"].endswith("viol.py")
+    # post-prune the baseline is clean even under --fail-stale
+    r = cli(str(bad), "--baseline", str(base), "--no-ruff",
+            "--fail-stale")
+    assert r.returncode == 0
+
+
+def test_prune_baseline_missing_file_is_usage_error(tmp_path):
+    ok = tmp_path / "ok.py"
+    ok.write_text("x = 1\n")
+    r = cli(str(ok), "--baseline", str(tmp_path / "nope.json"),
+            "--prune-baseline")
+    assert r.returncode == 2
+
+
+def test_prune_preserves_extra_payload_sections(tmp_path):
+    base = tmp_path / "base.json"
+    report.save_baseline(
+        str(base), [Finding("X1", "entry", 1, 1, "stale")],
+        extra={"budgets": {"h2d_bytes": 123}})
+    assert report.prune_stale(str(base), []) == 1
+    payload = json.loads(base.read_text())
+    assert payload["entries"] == []
+    assert payload["budgets"] == {"h2d_bytes": 123}
+
+
 def test_bad_baseline_version_rejected(tmp_path):
     base = tmp_path / "base.json"
     base.write_text(json.dumps({"version": 99, "entries": []}))

@@ -54,3 +54,216 @@ def test_roofline_terms_units():
 
 def test_shape_parsing_ignores_unknown_dtypes():
     assert ha._shape_list("token[3,4] f32[2,2]") == [("f32", [2, 2])]
+
+
+# ---------------------------------------------------------------------------
+# trip-count direction handling + unknown markers
+# ---------------------------------------------------------------------------
+
+def hlo_with_condition(cmp_line: str) -> str:
+    return textwrap.dedent(f"""\
+        HloModule cond_test
+
+        %b (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {{
+          %p = (s32[], f32[4,4]) parameter(0)
+          %iv = s32[] get-tuple-element(%p), index=0
+          %x = f32[4,4] get-tuple-element(%p), index=1
+          %w = f32[4,4] constant({{...}})
+          %dot.1 = f32[4,4]{{1,0}} dot(%x, %w), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+          ROOT %t = (s32[], f32[4,4]) tuple(%iv, %dot.1)
+        }}
+
+        %c (p2: (s32[], f32[4,4])) -> pred[] {{
+          %p2 = (s32[], f32[4,4]) parameter(0)
+          %iv2 = s32[] get-tuple-element(%p2), index=0
+          %k = s32[] constant(7)
+          ROOT %cmp = pred[] {cmp_line}
+        }}
+
+        ENTRY %main (a: f32[4,4]) -> f32[4,4] {{
+          %a = f32[4,4] parameter(0)
+          %iv0 = s32[] constant(0)
+          %tup = (s32[], f32[4,4]) tuple(%iv0, %a)
+          %loop = (s32[], f32[4,4]) while(%tup), condition=%c, body=%b
+          ROOT %out = f32[4,4] get-tuple-element(%loop), index=1
+        }}
+        """)
+
+
+DOT = 2 * 4 * 4 * 4                      # one 4x4x4 dot per iteration
+
+
+def test_trip_count_le_direction():
+    a = ha.analyze(hlo_with_condition(
+        "compare(%iv2, %k), direction=LE"))
+    assert a["flops"] == DOT * 8         # iv <= 7 from 0: 8 trips
+    assert a["unknown_trip_counts"] == 0
+
+
+def test_trip_count_constant_on_lhs_flips_direction():
+    # 7 > iv is iv < 7: a count-up loop despite direction=GT
+    a = ha.analyze(hlo_with_condition(
+        "compare(%k, %iv2), direction=GT"))
+    assert a["flops"] == DOT * 7
+    assert a["unknown_trip_counts"] == 0
+
+
+def test_trip_count_countdown_is_unknown_not_one_silently():
+    # iv > 7 counts DOWN from an init we cannot see here — the body must
+    # still be costed once, but the analysis must say so loudly
+    a = ha.analyze(hlo_with_condition(
+        "compare(%iv2, %k), direction=GT"))
+    assert a["flops"] == DOT
+    assert a["unknown_trip_counts"] == 1
+
+
+def test_trip_count_ge_unknown_counted_once():
+    a = ha.analyze(hlo_with_condition(
+        "compare(%iv2, %k), direction=GE"))
+    assert a["unknown_trip_counts"] == 1
+
+
+NESTED = textwrap.dedent("""\
+    HloModule nested
+
+    %inner.body (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+      %p = (s32[], f32[4,4]) parameter(0)
+      %iv = s32[] get-tuple-element(%p), index=0
+      %x = f32[4,4] get-tuple-element(%p), index=1
+      %w = f32[4,4] constant({...})
+      %dot.1 = f32[4,4]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      ROOT %t = (s32[], f32[4,4]) tuple(%iv, %dot.1)
+    }
+
+    %inner.cond (p2: (s32[], f32[4,4])) -> pred[] {
+      %p2 = (s32[], f32[4,4]) parameter(0)
+      %iv2 = s32[] get-tuple-element(%p2), index=0
+      %c2 = s32[] constant(5)
+      ROOT %cmp2 = pred[] compare(%iv2, %c2), direction=LT
+    }
+
+    %outer.body (q: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+      %q = (s32[], f32[4,4]) parameter(0)
+      %jv = s32[] get-tuple-element(%q), index=0
+      %y = f32[4,4] get-tuple-element(%q), index=1
+      %jv0 = s32[] constant(0)
+      %tup2 = (s32[], f32[4,4]) tuple(%jv0, %y)
+      %loop2 = (s32[], f32[4,4]) while(%tup2), condition=%inner.cond, body=%inner.body
+      %y2 = f32[4,4] get-tuple-element(%loop2), index=1
+      ROOT %t2 = (s32[], f32[4,4]) tuple(%jv, %y2)
+    }
+
+    %outer.cond (q2: (s32[], f32[4,4])) -> pred[] {
+      %q2 = (s32[], f32[4,4]) parameter(0)
+      %jv2 = s32[] get-tuple-element(%q2), index=0
+      %c3 = s32[] constant(3)
+      ROOT %cmp3 = pred[] compare(%jv2, %c3), direction=LT
+    }
+
+    ENTRY %main (a: f32[4,4]) -> f32[4,4] {
+      %a = f32[4,4] parameter(0)
+      %iv0 = s32[] constant(0)
+      %tup = (s32[], f32[4,4]) tuple(%iv0, %a)
+      %loop = (s32[], f32[4,4]) while(%tup), condition=%outer.cond, body=%outer.body
+      ROOT %out = f32[4,4] get-tuple-element(%loop), index=1
+    }
+    """)
+
+
+def test_nested_while_trip_counts_multiply():
+    a = ha.analyze(NESTED)
+    assert a["flops"] == DOT * 5 * 3
+    assert a["unknown_trip_counts"] == 0
+
+
+FUSED = textwrap.dedent("""\
+    HloModule fused
+
+    %fused_computation (fp: f32[8,16]) -> f32[8,16] {
+      %fp = f32[8,16] parameter(0)
+      %fw = f32[16,16] constant({...})
+      ROOT %fdot = f32[8,16]{1,0} dot(%fp, %fw), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+    }
+
+    ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+      %a = f32[8,16] parameter(0)
+      ROOT %fus = f32[8,16] fusion(%a), kind=kOutput, calls=%fused_computation
+    }
+    """)
+
+
+def test_fusion_computation_dots_counted():
+    a = ha.analyze(FUSED)
+    assert a["flops"] == 2 * 8 * 16 * 16
+    assert a["unknown_trip_counts"] == 0
+
+
+# ---------------------------------------------------------------------------
+# structural findings (higgsxla X4 foundation)
+# ---------------------------------------------------------------------------
+
+STRUCT = textwrap.dedent("""\
+    HloModule struct
+
+    %loop.body (p: (s32[], f32[64,128])) -> (s32[], f32[64,128]) {
+      %p = (s32[], f32[64,128]) parameter(0)
+      %iv = s32[] get-tuple-element(%p), index=0
+      %x = f32[64,128] get-tuple-element(%p), index=1
+      %idx = s32[12,1] constant({...})
+      %g = f32[12,128] gather(%x, %idx), offset_dims={1}
+      %ds = f32[1,128] dynamic-slice(%x, %iv, %iv), dynamic_slice_sizes={1,128}
+      ROOT %t = (s32[], f32[64,128]) tuple(%iv, %x)
+    }
+
+    %loop.cond (p2: (s32[], f32[64,128])) -> pred[] {
+      %p2 = (s32[], f32[64,128]) parameter(0)
+      %iv2 = s32[] get-tuple-element(%p2), index=0
+      %c = s32[] constant(4)
+      ROOT %cmp = pred[] compare(%iv2, %c), direction=LT
+    }
+
+    %layout_fusion (fp: f32[512,1024]) -> f32[1024,512] {
+      %fp = f32[512,1024] parameter(0)
+      ROOT %tp = f32[1024,512] transpose(%fp), dimensions={1,0}
+    }
+
+    ENTRY %main (a: f32[64,128], b: f32[512,1024], v: f32[32,1], u: f32[1,32]) -> f32[64,128] {
+      %a = f32[64,128] parameter(0)
+      %b = f32[512,1024] parameter(1)
+      %v = f32[32,1] parameter(2)
+      %u = f32[1,32] parameter(3)
+      %deg = f32[32,32]{1,0} dot(%v, %u), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %fus = f32[1024,512] fusion(%b), kind=kLoop, calls=%layout_fusion
+      %iv0 = s32[] constant(0)
+      %tup = (s32[], f32[64,128]) tuple(%iv0, %a)
+      %loop = (s32[], f32[64,128]) while(%tup), condition=%loop.cond, body=%loop.body
+      ROOT %out = f32[64,128] get-tuple-element(%loop), index=1
+    }
+    """)
+
+
+def test_structural_findings_flag_all_three_patterns():
+    kinds = sorted({f["kind"] for f in ha.structural_findings(STRUCT)})
+    assert kinds == ["degenerate_dot", "dynamic_slice_in_while",
+                     "gather_in_while", "zero_flop_layout_fusion"]
+
+
+def test_structural_findings_clean_module_is_clean():
+    assert ha.structural_findings(HLO) == []
+
+
+def test_structural_findings_dus_not_flagged_as_dynamic_slice():
+    # in-place dynamic-update-slice inside a loop is the *intended* XLA
+    # idiom; only reads (dynamic-slice/gather) are random access
+    hlo = STRUCT.replace(
+        "%ds = f32[1,128] dynamic-slice(%x, %iv, %iv), "
+        "dynamic_slice_sizes={1,128}",
+        "%ds = f32[64,128] dynamic-update-slice(%x, %x, %iv, %iv)")
+    kinds = {f["kind"] for f in ha.structural_findings(hlo)}
+    assert "dynamic_slice_in_while" not in kinds
+
+
+def test_structural_findings_small_layout_fusion_below_threshold():
+    finds = ha.structural_findings(
+        STRUCT, fusion_bytes_threshold=1 << 30)
+    assert "zero_flop_layout_fusion" not in {f["kind"] for f in finds}

@@ -1,0 +1,316 @@
+"""higgsxla rule fixtures: every rule class X1-X5 has a true-positive
+(a seeded regression must trip it) and a false-positive control (the
+blessed idiom must stay clean), mirroring tests/test_analysis.py for
+higgslint.  Synthetic entries go through the REAL pipeline —
+``jit(fn).trace`` -> lower -> compile -> optimized HLO — so these also
+pin the jax APIs the analyzer depends on."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.xla import registry, rules, trace
+from repro.analysis.xla.cli import main as xla_main
+from repro.analysis.xla.registry import EntryPoint, TraceCase
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def sds(shape, dt=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dt)
+
+
+def entry(name, fn, cases, static=(), **kw):
+    return EntryPoint(name, lambda: (fn, static, cases), **kw)
+
+
+def run(ep, **check_kw):
+    arts = trace.trace_entries([ep])
+    return arts, rules.check(arts, **check_kw)
+
+
+# ---------------------------------------------------------------------------
+# X1: host<->device transfers
+# ---------------------------------------------------------------------------
+
+def test_clean_entry_has_no_findings():
+    ep = entry("synth.clean", lambda x: x * 2.0, [
+        TraceCase("q8", (sds((8,)),))], expected_compile_keys=1)
+    arts, finds = run(ep)
+    assert finds == []
+    assert arts[0].error_kind is None
+
+
+def test_x1_np_asarray_inside_jit_is_flagged():
+    def bad(x):
+        return np.asarray(x).sum()      # implicit d2h materialization
+    ep = entry("synth.asarray", bad, [TraceCase("q8", (sds((8,)),))])
+    arts, finds = run(ep)
+    assert arts[0].error_kind == "host_materialization"
+    assert any(f.rule == "X1" and "host materialization" in f.message
+               for f in finds)
+
+
+def test_x1_pure_callback_is_flagged():
+    def cb(x):
+        return jax.pure_callback(
+            lambda v: np.asarray(v) * 2, sds((8,)), x)
+    ep = entry("synth.callback", cb, [TraceCase("q8", (sds((8,)),))])
+    arts, finds = run(ep)
+    assert "pure_callback" in arts[0].callback_prims
+    assert any(f.rule == "X1" and "pure_callback" in f.message
+               for f in finds)
+
+
+def test_x1_eager_production_entry_is_flagged():
+    ep = entry("synth.eager", lambda x: x + 1.0,
+               [TraceCase("q8", (sds((8,)),))], jit_in_production=False)
+    _, finds = run(ep)
+    assert any(f.rule == "X1" and "eagerly" in f.message for f in finds)
+
+
+def test_transfer_accounting_from_host_args():
+    ep = entry("synth.xfer", lambda a, b: a + b, [
+        TraceCase("q64", (sds((64,)), sds((64,))))],
+        host_args=(0,), fetch_output=True)
+    arts, _ = run(ep)
+    assert arts[0].h2d_bytes == 64 * 4          # only arg 0 is host-side
+    assert arts[0].d2h_bytes == 64 * 4
+    assert arts[0].host_operands == 1
+    budget = rules.measured_budgets(arts)
+    assert budget["h2d_bytes"] == 64 * 4
+    assert budget["host_transfer_sites"] == 2   # 1 operand + 1 fetch
+
+
+# ---------------------------------------------------------------------------
+# X2: recompile hazards
+# ---------------------------------------------------------------------------
+
+def test_x2_unbucketed_corpus_exceeds_declared_keys():
+    fn = jnp.sum
+    cases = [TraceCase("q5", (sds((5,)),)), TraceCase("q6", (sds((6,)),))]
+    _, finds = run(entry("synth.unbucketed", fn, cases,
+                         expected_compile_keys=1))
+    assert any(f.rule == "X2" and "compile-cache keys" in f.message
+               for f in finds)
+    # declaring the honest budget is the false-positive control
+    _, finds = run(entry("synth.bucketed", fn, cases,
+                         expected_compile_keys=2))
+    assert finds == []
+
+
+def test_x2_pow2_padded_shapes_share_one_key():
+    # the production bucketing contract: pow2-padded operands hit the
+    # same compile-cache key no matter the pre-pad logical size
+    k1 = trace.case_cache_key(TraceCase("a", (sds((8,)),)), ())
+    k2 = trace.case_cache_key(TraceCase("b", (sds((8,)),)), ())
+    assert k1 == k2
+
+
+def test_x2_python_scalar_operand_is_flagged():
+    cases = [TraceCase("scalar", (sds((8,)), 3))]
+    _, finds = run(entry("synth.pyscalar", lambda x, n: x * n, cases))
+    assert any(f.rule == "X2" and "python-scalar" in f.message
+               for f in finds)
+    _, finds = run(entry("synth.pyscalar_ok", lambda x, n: x * n, cases,
+                         allow_python_scalars=True))
+    assert not any(f.rule == "X2" for f in finds)
+
+
+def test_np_scalar_is_not_a_python_scalar():
+    # np.uint32(ts) is the blessed idiom (strong-typed, stable key)
+    cases = [TraceCase("npscalar", (sds((8,)), np.uint32(7)))]
+    _, finds = run(entry("synth.npscalar",
+                         lambda x, t: x * t.astype(jnp.float32), cases))
+    assert not any("python-scalar" in f.message for f in finds)
+
+
+# ---------------------------------------------------------------------------
+# X3: dtype discipline
+# ---------------------------------------------------------------------------
+
+def test_x3_bf16_upcast_is_flagged():
+    def up(x):
+        return x.astype(jnp.float32).sum()
+    ep = entry("synth.upcast", up,
+               [TraceCase("q8", (sds((8,), jnp.bfloat16),))])
+    arts, finds = run(ep)
+    assert ("bfloat16", "float32") in arts[0].upcasts
+    assert any(f.rule == "X3" and "upcast" in f.message for f in finds)
+
+
+def test_x3_downcast_and_bool_convert_are_clean():
+    def down(x, m):
+        return x.astype(jnp.bfloat16) * m.astype(jnp.bfloat16)
+    ep = entry("synth.downcast", down,
+               [TraceCase("q8", (sds((8,)), sds((8,), jnp.bool_)))])
+    _, finds = run(ep)
+    assert not any(f.rule == "X3" for f in finds)
+
+
+def test_x3_f64_leak_flagged_unless_allowed():
+    base = dict(entry=entry("synth.f64", jnp.sum,
+                            [TraceCase("q8", (sds((8,)),))]),
+                case=TraceCase("q8", (sds((8,)),)))
+    art = trace.Artifact(**base, hlo_f64=True)
+    finds = rules.check([art])
+    assert any(f.rule == "X3" and "float64" in f.message for f in finds)
+    ok = entry("synth.f64ok", jnp.sum, [], allow_f64=True)
+    art = trace.Artifact(entry=ok, case=base["case"], hlo_f64=True)
+    assert not any(f.rule == "X3" for f in rules.check([art]))
+
+
+# ---------------------------------------------------------------------------
+# X4: structural anti-patterns
+# ---------------------------------------------------------------------------
+
+def _loop_fn(x):
+    def body(i, s):
+        return s + x[i]                 # dynamic-slice inside the while
+    return jax.lax.fori_loop(0, x.shape[0], body, jnp.float32(0))
+
+
+def test_x4_dynamic_slice_in_loop_body_is_flagged():
+    ep = entry("synth.loopgather", _loop_fn,
+               [TraceCase("q64", (sds((64,)),))])
+    arts, finds = run(ep)
+    assert any(s["kind"] == "dynamic_slice_in_while"
+               for s in arts[0].structural)
+    assert any(f.rule == "X4" and "dynamic_slice_in_while" in f.message
+               for f in finds)
+
+
+def test_x4_interpret_tag_suppresses_grid_streaming_slices():
+    ep = entry("synth.loopinterp", _loop_fn,
+               [TraceCase("q64", (sds((64,)),))],
+               tags=frozenset({"interpret"}))
+    _, finds = run(ep)
+    assert not any("dynamic_slice_in_while" in f.message for f in finds)
+
+
+def test_x4_unknown_trip_count_surfaced():
+    ep = entry("synth.unknown", jnp.sum, [])
+    art = trace.Artifact(entry=ep, case=TraceCase("c", ()),
+                         unknown_trip_counts=2)
+    finds = rules.check([art])
+    assert any(f.rule == "X4" and "unknown trip" in f.message
+               for f in finds)
+
+
+# ---------------------------------------------------------------------------
+# X5: cost drift
+# ---------------------------------------------------------------------------
+
+def _cost_art(flops=1000, nbytes=4000):
+    ep = entry("synth.cost", jnp.sum, [])
+    return trace.Artifact(entry=ep, case=TraceCase("c", ()),
+                          flops=flops, bytes_accessed=nbytes)
+
+
+def test_x5_drift_beyond_tolerance_is_flagged():
+    costs = {"synth.cost/c": {"flops": 500, "bytes_accessed": 4000}}
+    finds = rules.check([_cost_art()], costs=costs)
+    assert any(f.rule == "X5" and "flops" in f.message for f in finds)
+
+
+def test_x5_within_tolerance_and_missing_reference():
+    costs = {"synth.cost/c": {"flops": 900, "bytes_accessed": 4100}}
+    assert not any(f.rule == "X5"
+                   for f in rules.check([_cost_art()], costs=costs))
+    finds = rules.check([_cost_art()], costs={})
+    assert any(f.rule == "X5" and "no committed cost" in f.message
+               for f in finds)
+
+
+def test_budget_check_directions():
+    violations, ratchets = rules.check_budgets(
+        {"h2d_bytes": 100, "d2h_bytes": 50},
+        {"h2d_bytes": 80, "d2h_bytes": 60})
+    assert len(violations) == 1 and "h2d_bytes" in violations[0]
+    assert len(ratchets) == 1 and "d2h_bytes" in ratchets[0]
+
+
+# ---------------------------------------------------------------------------
+# CLI: baseline lifecycle + seeded end-to-end regressions
+# ---------------------------------------------------------------------------
+
+def test_cli_baseline_roundtrip_and_fail_stale(tmp_path):
+    bl = str(tmp_path / "xla-baseline.json")
+    with registry.temporary():
+        registry.register(entry("synth.cli", _loop_fn,
+                                [TraceCase("q64", (sds((64,)),))]))
+        argv = ["--entries", "synth.cli", "--baseline", bl]
+        assert xla_main(argv + ["--write-baseline"]) == 0
+        assert xla_main(argv) == 0                      # baselined
+        payload = json.load(open(bl))
+        assert payload["budgets"]["compile_cache_keys"] == 1
+        assert "synth.cli/q64" in payload["costs"]
+        # a stale entry: warn by default, fail under --fail-stale,
+        # gone after --prune-baseline
+        payload["entries"].append({"path": "synth.cli", "rule": "X4",
+                                   "message": "ghost finding"})
+        with open(bl, "w") as fh:
+            json.dump(payload, fh)
+        assert xla_main(argv) == 0
+        assert xla_main(argv + ["--fail-stale"]) == 1
+        assert xla_main(argv + ["--prune-baseline"]) == 0
+        assert xla_main(argv + ["--fail-stale"]) == 0
+        kept = json.load(open(bl))
+        assert all(e["message"] != "ghost finding"
+                   for e in kept["entries"])
+        assert "costs" in kept                          # extra preserved
+
+
+def test_cli_missing_explicit_baseline_is_usage_error(tmp_path):
+    with registry.temporary():
+        registry.register(entry("synth.cli2", jnp.sum,
+                                [TraceCase("q8", (sds((8,)),))]))
+        rc = xla_main(["--entries", "synth.cli2",
+                       "--baseline", str(tmp_path / "missing.json")])
+        assert rc == 2
+
+
+def _run_cli(args, cwd=REPO):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis.xla", *args],
+        cwd=cwd, env=env, capture_output=True, text=True, timeout=600)
+
+
+def test_seeded_asarray_regression_fails_the_gate(tmp_path):
+    # the acceptance scenario: an injected np.asarray inside a jitted
+    # probe must produce an X1 finding and a nonzero exit
+    plugin = tmp_path / "bad_probe.py"
+    plugin.write_text(
+        "import jax\n"
+        "import numpy as np\n"
+        "from repro.analysis.xla.registry import (EntryPoint, TraceCase,"
+        " register)\n"
+        "def _build():\n"
+        "    def bad_probe(x):\n"
+        "        return np.asarray(x).sum()\n"
+        "    cases = [TraceCase('q8',"
+        " (jax.ShapeDtypeStruct((8,), 'float32'),))]\n"
+        "    return bad_probe, (), cases\n"
+        "register(EntryPoint('plugin.bad_probe', _build,"
+        " host_args=(0,)))\n")
+    proc = _run_cli(["--entries", "plugin.bad_probe",
+                     "--plugin", str(plugin)])
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "[X1]" in proc.stdout
+    assert "host materialization" in proc.stdout
+
+
+@pytest.mark.slow
+def test_shipped_tree_is_clean_against_committed_baseline():
+    # the CI compile-audit gate: the full corpus over the committed
+    # baseline and budgets must pass on the shipped tree
+    proc = _run_cli(["--check"])
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 new finding(s)" in proc.stdout
