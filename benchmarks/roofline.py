@@ -4,6 +4,14 @@ bottleneck, and the MODEL_FLOPS / HLO_FLOPs usefulness ratio.
 
 Hardware model (TPU v5e-like): 197 TFLOP/s bf16, 819 GB/s HBM,
 ~50 GB/s/link ICI x 4 links.
+
+``--smoke`` is the ingest-roofline CI gate: it measures the batched
+drain's speedup over the serial reference on a small stream and asserts
+it clears the **committed** ``ingest/batched_speedup`` floor from
+``benchmarks/baselines/BENCH_baseline.json`` (with the same 25% noise
+tolerance the compare_bench gate uses).  Raising that committed floor is
+how a perf PR burns its win into CI — the gate then fails any later
+change that gives the win back.
 """
 from __future__ import annotations
 
@@ -83,5 +91,46 @@ def run(out_dir: str = "experiments/dryrun"):
             f"hbm_GB={s['mem_bytes_per_dev'] / 1e9:.1f}{extra}")
 
 
+def committed_floor(metric: str = "ingest/batched_speedup") -> float:
+    path = os.path.join(os.path.dirname(__file__), "baselines",
+                        "BENCH_baseline.json")
+    with open(path) as fh:
+        base = json.load(fh)
+    entry = base["metrics"][metric]
+    assert entry["kind"] == "floor", metric
+    return float(entry["value"])
+
+
+def smoke(n_edges: int = 30_000, seed: int = 0,
+          tolerance: float = 0.25) -> None:
+    """CI gate: measured batched-ingest speedup vs the committed floor."""
+    from benchmarks import throughput
+
+    floor = committed_floor()
+    stream = throughput.lkml_like_stream(n_edges=n_edges, seed=seed)
+    serial_s, batched_s, _ = throughput.serial_vs_batched(stream)
+    speedup = serial_s / batched_s
+    gate = floor * (1.0 - tolerance)
+    common.emit("roofline/ingest/batched_speedup", speedup,
+                f"committed_floor={floor};gate={gate:.2f}")
+    assert speedup >= gate, (
+        f"roofline smoke: batched ingest speedup {speedup:.2f}x fell "
+        f"below the committed floor {floor}x (gate {gate:.2f}x with "
+        f"{tolerance:.0%} noise tolerance)")
+    print(f"roofline smoke OK: batched={speedup:.2f}x serial "
+          f"(committed floor {floor}x)")
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="ingest speedup gate vs the committed "
+                         "BENCH_baseline floor")
+    ap.add_argument("--edges", type=int, default=30_000)
+    args = ap.parse_args()
+    if args.smoke:
+        smoke(n_edges=args.edges)
+    else:
+        run()

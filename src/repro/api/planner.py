@@ -28,17 +28,58 @@ be replayed.
 """
 from __future__ import annotations
 
+import functools
 from typing import TYPE_CHECKING
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.api.queries import (EDGE_LOWERED, QueryBatch, QueryResult,
                                QueryStats, VertexQuery)
 from repro.core import cmatrix
+from repro.core.cmatrix import NodeState
 from repro.core.cmatrix import pow2_pad as _pow2_pad
 
 if TYPE_CHECKING:  # avoid a circular import; higgs imports this module
     from repro.core.higgs import HiggsSketch
+
+
+# ---------------------------------------------------------------------------
+# fused probe launches
+# ---------------------------------------------------------------------------
+#
+# One jitted launch per (level, time-range class): the pool-row take,
+# level-coordinate derivation and probe reduce fuse over the resident
+# slabs from ``_LevelPool.device_view()``.  Only the probed row indices,
+# the plan's leaf coordinates and the two time scalars cross to the
+# device per launch; the slabs themselves upload at most once per
+# mutation epoch (device storage: never).  ``params``/``level`` are
+# static (HiggsParams is frozen), so the cache keys by (slab shape, pad,
+# level, match_time) exactly as the higgsxla corpus declares.
+
+@functools.partial(jax.jit,
+                   static_argnames=("level", "params", "match_time"))
+def _edge_probe_fused(slabs: NodeState, idx, mask, f1s, bs, f1d, bd,
+                      ts, te, *, level: int, params, match_time: bool):
+    nodes = NodeState(*(jnp.take(f, idx, axis=0) for f in slabs))
+    fs_l, rows = cmatrix.coords_at_level(f1s, bs, level, params)
+    fd_l, cols = cmatrix.coords_at_level(f1d, bd, level, params)
+    return cmatrix.probe_edge(nodes, mask, fs_l, fd_l, rows, cols,
+                              ts, te, match_time=match_time)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("level", "params", "direction",
+                                    "match_time"))
+def _vertex_probe_fused(slabs: NodeState, idx, mask, f1, base, ts, te, *,
+                        level: int, params, direction: str,
+                        match_time: bool):
+    nodes = NodeState(*(jnp.take(f, idx, axis=0) for f in slabs))
+    f_l, rows = cmatrix.coords_at_level(f1, base, level, params)
+    return cmatrix.probe_vertex(nodes, mask, f_l, rows, ts, te,
+                                direction=direction,
+                                match_time=match_time)
 
 
 class QueryPlanner:
@@ -193,12 +234,16 @@ class QueryPlanner:
         r = p.r if p.use_mmb else 1
         stats.device_dispatches += 1
         stats.buckets_probed += len(ids) * r * r * len(np.asarray(f1s))
-        nodes, mask = sk.pools[level - 1].gather(ids, _pow2_pad(len(ids)))
-        fs_l, rows = cmatrix.coords_at_level(f1s, bs, level, p)
-        fd_l, cols = cmatrix.coords_at_level(f1d, bd, level, p)
-        res = cmatrix.probe_edge(nodes, mask, fs_l, fd_l, rows, cols,
-                                 np.uint32(ts), np.uint32(te),
-                                 match_time=filter_time)
+        pool = sk.pools[level - 1]
+        idx, mask = pool.gather_ids(ids, _pow2_pad(len(ids)))
+        res = _edge_probe_fused(pool.device_view(), idx, mask,
+                                jnp.asarray(f1s, jnp.uint32),
+                                jnp.asarray(bs, jnp.uint32),
+                                jnp.asarray(f1d, jnp.uint32),
+                                jnp.asarray(bd, jnp.uint32),
+                                np.uint32(ts), np.uint32(te),
+                                level=level, params=p,
+                                match_time=filter_time)
         return np.asarray(res, np.float64)
 
     def _probe_level_vertex(self, level, ids, f1, base, ts, te, direction,
@@ -212,11 +257,15 @@ class QueryPlanner:
         stats.device_dispatches += 1
         stats.buckets_probed += len(ids) * r * p.d(level) * \
             len(np.asarray(f1))
-        nodes, mask = sk.pools[level - 1].gather(ids, _pow2_pad(len(ids)))
-        f_l, rows = cmatrix.coords_at_level(f1, base, level, p)
-        res = cmatrix.probe_vertex(nodes, mask, f_l, rows, np.uint32(ts),
-                                   np.uint32(te), direction=direction,
-                                   match_time=filter_time)
+        pool = sk.pools[level - 1]
+        idx, mask = pool.gather_ids(ids, _pow2_pad(len(ids)))
+        res = _vertex_probe_fused(pool.device_view(), idx, mask,
+                                  jnp.asarray(f1, jnp.uint32),
+                                  jnp.asarray(base, jnp.uint32),
+                                  np.uint32(ts), np.uint32(te),
+                                  level=level, params=p,
+                                  direction=direction,
+                                  match_time=filter_time)
         return np.asarray(res, np.float64)
 
     # -- host-side overflow-block probes ---------------------------------
@@ -266,14 +315,15 @@ class QueryPlanner:
 # higgsxla shape corpus: the production probe launches
 # ---------------------------------------------------------------------------
 #
-# ``_probe_level_edge``/``_probe_level_vertex`` call ``cmatrix.probe_edge``
-# / ``probe_vertex`` UNJITTED (eager per-op dispatch) over a pool gather
-# that pow2-pads the node count (``_pow2_pad(len(ids))``), with np.uint32
-# time scalars and an ``np.asarray`` output fetch.  The corpus traces the
-# jitted form of exactly those shapes so the analyzer can inventory the
-# per-launch transfer bytes; ``jit_in_production=False`` records the
-# eager launch itself as a baselined X1 finding that the device-resident
-# refactor (see ROADMAP) is expected to retire.
+# ``_probe_level_edge``/``_probe_level_vertex`` dispatch ONE jitted
+# launch (`_edge_probe_fused`/`_vertex_probe_fused`): pool-row take +
+# coordinate derivation + probe reduce fused over the resident slabs.
+# Per launch only the row indices, mask, plan coordinates and np.uint32
+# time scalars cross to the device — the slab operand stays resident
+# (``_LevelPool.device_view`` re-uploads host-storage pools at most once
+# per mutation epoch; that barrier is inventoried separately as
+# ``planner.pool_sync``).  ``jit_in_production=True``: the former eager
+# X1 findings are retired by this fusion, not re-baselined.
 
 def xla_entry_points():
     import jax
@@ -284,56 +334,76 @@ def xla_entry_points():
     from repro.core.params import HiggsParams
 
     p = HiggsParams()
-    r, b = p.r, p.b
-    u32, f32 = jnp.uint32, jnp.float32
+    b = p.b
+    u32, i32, f32 = jnp.uint32, jnp.int32, jnp.float32
 
     def sds(shape, dt):
         return jax.ShapeDtypeStruct(shape, dt)
 
-    def nodes(m, d):
-        shp = (m, d, d, b)
+    def slabs(cap, d):
+        shp = (cap, d, d, b)
         return NodeState(sds(shp, u32), sds(shp, u32), sds(shp, f32),
                          sds(shp, u32), sds(shp, u32))
 
-    def edge_args(m, q, d):
-        return (nodes(m, d), sds((m,), jnp.bool_), sds((q,), u32),
-                sds((q,), u32), sds((q, r), u32), sds((q, r), u32),
-                sds((), u32), sds((), u32))
+    def edge_args(cap, m, q, d):
+        return (slabs(cap, d), sds((m,), i32), sds((m,), jnp.bool_),
+                sds((q,), u32), sds((q,), u32), sds((q,), u32),
+                sds((q,), u32), sds((), u32), sds((), u32))
 
     def build_edge():
         d1, d2 = p.d1, p.d(2)
         cases = [
             # two pow2 gather buckets at level 1 + one level-2 shape:
             # three declared compile keys for the plan-level launches
-            TraceCase("L1_m8_q16", edge_args(8, 16, d1),
-                      {"match_time": False}),
-            TraceCase("L1_m16_q16", edge_args(16, 16, d1),
-                      {"match_time": False}),
-            TraceCase("L2_m8_q16", edge_args(8, 16, d2),
-                      {"match_time": False}),
+            TraceCase("L1_m8_q16", edge_args(64, 8, 16, d1),
+                      {"level": 1, "params": p, "match_time": False}),
+            TraceCase("L1_m16_q16", edge_args(64, 16, 16, d1),
+                      {"level": 1, "params": p, "match_time": False}),
+            TraceCase("L2_m8_q16", edge_args(16, 8, 16, d2),
+                      {"level": 2, "params": p, "match_time": False}),
             # the filtered re-probe at level 1 (distinct static arg)
-            TraceCase("L1_m8_q16_filtered", edge_args(8, 16, d1),
-                      {"match_time": True}),
+            TraceCase("L1_m8_q16_filtered", edge_args(64, 8, 16, d1),
+                      {"level": 1, "params": p, "match_time": True}),
         ]
-        return cmatrix.probe_edge, ("match_time",), cases
+        return _edge_probe_fused, ("level", "params", "match_time"), cases
 
     def build_vertex():
         d1 = p.d1
-        args = (nodes(8, d1), sds((8,), jnp.bool_), sds((16,), u32),
-                sds((16, r), u32), sds((), u32), sds((), u32))
+        args = (slabs(64, d1), sds((8,), i32), sds((8,), jnp.bool_),
+                sds((16,), u32), sds((16,), u32), sds((), u32),
+                sds((), u32))
         cases = [
             TraceCase("L1_m8_q16_out", args,
-                      {"direction": "out", "match_time": False}),
+                      {"level": 1, "params": p, "direction": "out",
+                       "match_time": False}),
             TraceCase("L1_m8_q16_in", args,
-                      {"direction": "in", "match_time": False}),
+                      {"level": 1, "params": p, "direction": "in",
+                       "match_time": False}),
         ]
-        return cmatrix.probe_vertex, ("direction", "match_time"), cases
+        return (_vertex_probe_fused,
+                ("level", "params", "direction", "match_time"), cases)
+
+    def build_pool_sync():
+        # the per-mutation-epoch device_view upload of a host-storage
+        # level-1 pool (cap=64 is the steady smoke-workload bucket):
+        # the one h2d barrier a query burst pays between drains.  Under
+        # device storage this transfer does not exist at all.
+        def pool_sync(fp_s, fp_d, w, t, idx):
+            return (fp_s, fp_d, w, t, idx)
+
+        args = tuple(slabs(64, p.d1))
+        return (jax.jit(pool_sync), (),
+                [TraceCase("L1_cap64", args, {})])
 
     return [
         EntryPoint("planner.edge_probe", build_edge,
-                   host_args=tuple(range(8)), fetch_output=True,
-                   jit_in_production=False, expected_compile_keys=4),
+                   host_args=(1, 2, 3, 4, 5, 6, 7, 8),
+                   fetch_output=True,
+                   jit_in_production=True, expected_compile_keys=4),
         EntryPoint("planner.vertex_probe", build_vertex,
-                   host_args=tuple(range(6)), fetch_output=True,
-                   jit_in_production=False, expected_compile_keys=2),
+                   host_args=(1, 2, 3, 4, 5, 6), fetch_output=True,
+                   jit_in_production=True, expected_compile_keys=2),
+        EntryPoint("planner.pool_sync", build_pool_sync,
+                   host_args=(0, 1, 2, 3, 4), fetch_output=False,
+                   jit_in_production=True, expected_compile_keys=1),
     ]

@@ -12,7 +12,7 @@ bottom-up whenever theta nodes of a level complete.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import os
 
 import jax.numpy as jnp
 import numpy as np
@@ -25,111 +25,8 @@ from repro.core import cmatrix, hashing
 from repro.core.cmatrix import EMPTY, NodeState
 from repro.core.cmatrix import pow2_pad as _pow2_pad
 from repro.core.params import HiggsParams
+from repro.core.pool import _LevelPool
 from repro.core.segments import SegmentStore
-
-
-class _LevelPool:
-    """Closed-node matrices for one tree level.
-
-    Host numpy storage with true in-place appends (a device append would
-    copy the whole pool per leaf on CPU backends); query gathers transfer
-    only the probed subset.  On a real TPU deployment the pool would stay
-    device-resident with donated updates — see DESIGN.md §3.
-
-    Node ids are **global** (stable across the stream's lifetime) while
-    the arrays hold only the retained window: ``base`` counts the nodes
-    the segment-store lifecycle has dropped from the front, so global id
-    ``u`` lives at physical slot ``u - base``.  With retention disabled
-    ``base`` stays 0 and global == physical, the original behavior.
-    """
-
-    def __init__(self, d: int, b: int):
-        self.d, self.b = d, b
-        self.n = 0
-        self.cap = 0
-        self.base = 0
-        self.arrs: Optional[dict] = None
-
-    @property
-    def total(self) -> int:
-        """Global node count ever appended (retained + dropped)."""
-        return self.base + self.n
-
-    def drop_prefix(self, k: int) -> None:
-        """Reclaim the ``k`` oldest retained slots (segment eviction /
-        coarsening): the retained suffix slides to the front in place,
-        capacity is kept for reuse by future appends."""
-        if k <= 0:
-            return
-        if k > self.n:
-            raise ValueError(f"cannot drop {k} of {self.n} nodes")
-        for name in NodeState._fields:
-            arr = self.arrs[name]
-            arr[: self.n - k] = arr[k: self.n].copy()
-        self.n -= k
-        self.base += k
-
-    def _grow(self, new_cap: int) -> None:
-        new = cmatrix.empty_node_arrays(new_cap, self.d, self.b)
-        if self.arrs is not None:
-            for name in NodeState._fields:
-                new[name][: self.n] = self.arrs[name][: self.n]
-        self.arrs = new
-        self.cap = new_cap
-
-    def load(self, arrs: dict, n: int, cap: int | None = None,
-             base: int = 0) -> None:
-        """Overwrite this pool with ``n`` snapshot nodes, re-growing to
-        the saved capacity so post-restore allocation behavior matches
-        the uninterrupted run exactly."""
-        self.arrs = None
-        self.n = 0
-        self.cap = 0
-        self.base = int(base)
-        cap = max(cap if cap is not None else n, n)
-        if cap == 0:
-            return
-        self._grow(cap)
-        for name in NodeState._fields:
-            self.arrs[name][:n] = arrs[name]
-        self.n = n
-
-    def append(self, node: NodeState) -> int:
-        if self.n == self.cap:
-            self._grow(max(4, self.cap * 2))
-        for name in NodeState._fields:
-            self.arrs[name][self.n] = np.asarray(getattr(node, name))
-        idx = self.n
-        self.n += 1
-        return idx
-
-    def append_batch(self, arrs: dict, count: int) -> int:
-        """Append ``count`` nodes from host-stacked field arrays in one
-        block copy; returns the base node id."""
-        need = self.n + count
-        if need > self.cap:
-            cap = max(4, self.cap)
-            while cap < need:
-                cap *= 2
-            self._grow(cap)
-        for name in NodeState._fields:
-            self.arrs[name][self.n:need] = arrs[name][:count]
-        base = self.n
-        self.n = need
-        return base
-
-    def gather(self, ids: np.ndarray, pad_to: int):
-        """(NodeState stacked to pad_to, mask) for a list of **global**
-        node ids; the window translation to physical slots happens here
-        so every caller keeps speaking stable ids."""
-        m = len(ids)
-        idx = np.zeros((pad_to,), np.int64)
-        idx[:m] = np.asarray(ids, np.int64) - self.base
-        mask = np.zeros((pad_to,), bool)
-        mask[:m] = True
-        nodes = NodeState(*(jnp.asarray(self.arrs[name][idx])
-                            for name in NodeState._fields))
-        return nodes, jnp.asarray(mask)
 
 
 class _LeafIndex:
@@ -281,12 +178,17 @@ class HiggsSketch(LegacyQueryMixin):
     snapshot_kind = "higgs"
     # rebuilt from params / restored via the probe_counter property —
     # intentionally not serialized (higgslint R3)
-    _SNAPSHOT_DERIVED = ("_probe_base", "_chunk_pad", "_backend")
+    _SNAPSHOT_DERIVED = ("_probe_base", "_chunk_pad", "_backend",
+                         "_storage", "_pipeline")
 
     def __init__(self, params: HiggsParams = HiggsParams()):
         self.params = params
+        self._backend = self._resolve_backend(params)
+        self._storage = self._resolve_storage(params, self._backend)
+        self._pipeline = None     # lazy fused-drain pipeline (pallas+device)
         self.pools: list[_LevelPool] = [
-            _LevelPool(params.d1, params.b)]       # level 1 (leaves)
+            _LevelPool(params.d1, params.b,
+                       storage=self._storage)]     # level 1 (leaves)
         self._leaves = _LeafIndex()
         self.ob = _OverflowStore()
         self._buf: list[np.ndarray] = []           # pending raw items
@@ -298,14 +200,31 @@ class HiggsSketch(LegacyQueryMixin):
         self._probe_base = 0                       # legacy counter offset
         self.planner = QueryPlanner(self)
         self._chunk_pad = _pow2_pad(params.chunk_size, lo=64)
-        self._backend = self._resolve_backend(params.insert_backend)
 
     @staticmethod
-    def _resolve_backend(backend: str) -> str:
+    def _resolve_backend(params: HiggsParams) -> str:
+        backend = params.insert_backend
         if backend != "auto":
             return backend
+        env = os.environ.get("HIGGS_INSERT_BACKEND", "").strip().lower()
+        if env in ("host", "vector", "pallas"):
+            if env == "pallas" and not (params.use_ob and
+                                        params.batched_ingest):
+                # the pallas kernel spills to overflow blocks from the
+                # batched drain; incompatible params fall back to host
+                # (explicit insert_backend="pallas" still raises)
+                return "host"
+            return env
         import jax
         return "vector" if jax.default_backend() == "tpu" else "host"
+
+    @staticmethod
+    def _resolve_storage(params: HiggsParams, backend: str) -> str:
+        if params.pool_storage != "auto":
+            return params.pool_storage
+        # device residency pays off when the drain runs on device; the
+        # host/vector placement engines keep the zero-copy numpy pools
+        return "device" if backend == "pallas" else "host"
 
     @property
     def leaf_starts(self) -> np.ndarray:
@@ -352,6 +271,12 @@ class HiggsSketch(LegacyQueryMixin):
         interval index, the overflow-store columns, the *pending* raw-item
         buffer (a mid-stream snapshot must not lose items that have not
         formed a leaf yet), plus ``structure_version`` and the params.
+
+        This is the **snapshot barrier** for device-resident pools: the
+        ``pool.arrs`` host view materializes the device slabs exactly
+        here (epoch-cached — repeated snapshots of an unchanged pool
+        reuse the fetch), so steady-state ingest never pays pool d2h and
+        kill-and-resume stays bit-identical across storage backends.
         """
         arrays: dict[str, np.ndarray] = {
             "leaf_starts": self._leaves.starts,
@@ -400,7 +325,8 @@ class HiggsSketch(LegacyQueryMixin):
         self.__init__(HiggsParams(**meta["config"]))
         for lvl, pm in enumerate(meta["pools"], start=1):
             if lvl > len(self.pools):
-                self.pools.append(_LevelPool(int(pm["d"]), int(pm["b"])))
+                self.pools.append(_LevelPool(int(pm["d"]), int(pm["b"]),
+                                             storage=self._storage))
             self.pools[lvl - 1].load(
                 {name: arrays[f"pool{lvl}/{name}"]
                  for name in NodeState._fields},
@@ -578,6 +504,11 @@ class HiggsSketch(LegacyQueryMixin):
         p = self.params
         nl = len(spans)
         s0, s_end = spans[0][0], spans[-1][1]
+        if self._backend == "pallas" and self._storage == "device":
+            # fused path: raw items stage once, hashing/placement/append
+            # all happen on device against the persistent pool slabs
+            self._close_leaves_fused(buf, spans)
+            return
         hs_full = hashing.np_mix32(buf[0, s0:s_end], p.seed)
         hd_full = hashing.np_mix32(buf[1, s0:s_end], p.seed ^ 0x5BD1E995)
         w_full = np.ascontiguousarray(buf[2, s0:s_end]).view(np.float32)
@@ -676,6 +607,54 @@ class HiggsSketch(LegacyQueryMixin):
         mask = np.asarray(spill_mask).astype(bool) & valid
         return host, mask, w          # no premerge: spill weights are raw
 
+    def _close_leaves_fused(self, buf: np.ndarray,
+                            spans: list[tuple[int, int]]) -> None:
+        """Device-resident drain (pallas backend + device pool storage).
+
+        Raw spans stage into the pinned double buffer and one fused
+        launch hashes, places and appends them into the donated level-1
+        slabs (`kernels/pipeline.py`).  Bit-identical to
+        :meth:`_insert_leaves_pallas` + ``append_batch``: same kernel,
+        same operand bits (the device ``mix32`` twin is exact), same
+        append order.  Only the spill mask returns to host; spilled hash
+        values are recomputed here from the staged raw items.
+        """
+        p = self.params
+        nl = len(spans)
+        max_len = max(e - s for s, e in spans)
+        pad = max(self._chunk_pad, _pow2_pad(max_len, lo=64))
+        lead = _pow2_pad(nl, lo=1)
+        if self._pipeline is None:
+            from repro.kernels.pipeline import DrainPipeline
+            self._pipeline = DrainPipeline(p)
+        pool = self.pools[0]
+        base_slot, spill_mask, stage = self._pipeline.ingest(
+            pool, buf, spans, lead, pad)
+        base = pool.base + base_slot
+        starts = buf[3, [s for s, _ in spans]]
+        ends = buf[3, [e - 1 for _, e in spans]]
+        self._leaves.extend(starts, ends)
+        self._t_last = max(self._t_last, int(ends[-1]))
+        self.segments.on_leaves([e - s for s, e in spans])
+        self._version += nl
+
+        if spill_mask.any():
+            for i in range(nl):
+                idxs = np.nonzero(spill_mask[i])[0]
+                if not len(idxs):
+                    continue
+                s_hs = hashing.np_mix32(stage[0, i, idxs], p.seed)
+                s_hd = hashing.np_mix32(stage[1, i, idxs],
+                                        p.seed ^ 0x5BD1E995)
+                self.ob.add(1, base + i,
+                            f1s=s_hs & p.fp_mask, f1d=s_hd & p.fp_mask,
+                            bs=(s_hs >> p.F1) % p.d1,
+                            bd=(s_hd >> p.F1) % p.d1,
+                            w=stage[2, i, idxs].view(np.float32)
+                            .astype(np.float64),
+                            t=stage[3, i, idxs])
+        self._maybe_aggregate()
+
     # ------------------------------------------------------------------
     # aggregation cascade
     # ------------------------------------------------------------------
@@ -700,7 +679,9 @@ class HiggsSketch(LegacyQueryMixin):
             if level >= len(self.pools):
                 # the leaf closings that triggered this cascade already
                 # bumped _version this drain
-                self.pools.append(_LevelPool(p.d(level + 1), p.b))  # higgslint: disable=R5
+                self.pools.append(  # higgslint: disable=R5
+                    _LevelPool(p.d(level + 1), p.b,
+                               storage=self._storage))
             if p.batched_ingest:
                 self._build_parents_batched(level, parent_n, n_ready)
             else:
@@ -740,19 +721,18 @@ class HiggsSketch(LegacyQueryMixin):
         p = self.params
         theta = p.theta
         pool = self.pools[level - 1]
-        # bulk child gather; c0 below does the base translation once for
-        # the whole contiguous block
-        arrs = pool.arrs  # higgslint: disable=R2
-        # u0 is the global parent id; children slots are window-physical
-        c0 = u0 * theta - pool.base
-        sl = slice(c0, c0 + m * theta)
+        # bulk child gather through the pool API: one contiguous block
+        # fetch (a bounded d2h barrier under device storage, plain
+        # views under host storage); gather_block translates global
+        # parent-child ids to window-physical slots internally
+        blk = pool.gather_block(u0 * theta, m * theta)
         d = pool.d
         per = theta * d * d * pool.b
 
-        e_fs = arrs["fp_s"][sl].reshape(m, per)
-        e_fd = arrs["fp_d"][sl].reshape(m, per)
-        e_w = arrs["w"][sl].reshape(m, per)
-        e_idx = arrs["idx"][sl].reshape(m, per)
+        e_fs = blk["fp_s"].reshape(m, per)
+        e_fd = blk["fp_d"].reshape(m, per)
+        e_w = blk["w"].reshape(m, per)
+        e_idx = blk["idx"].reshape(m, per)
         grid = np.broadcast_to(
             np.arange(d, dtype=np.uint32)[:, None, None],
             (d, d, pool.b))

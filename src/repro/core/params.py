@@ -117,6 +117,11 @@ class HiggsParams:
     #                               "pallas" = sequential Alg.-1 kernel
     interpret: bool | None = None   # Pallas interpret mode; None = auto
     #                                 (compile on TPU, interpret elsewhere)
+    pool_storage: str = "auto"    # level-pool slab storage: "host" =
+    #                               numpy (CPU default, bit reference),
+    #                               "device" = persistent jax slabs,
+    #                               "auto" -> "device" for the pallas
+    #                               backend (fused drain), else "host"
     retention: RetentionPolicy = RetentionPolicy()
     #                             # temporal lifecycle policy; accepts a
     #                             # RetentionPolicy, a dict (snapshot
@@ -142,6 +147,9 @@ class HiggsParams:
         if self.insert_backend not in ("auto", "vector", "host", "pallas"):
             raise ValueError("insert_backend must be 'auto', 'vector', "
                              "'host', or 'pallas'")
+        if self.pool_storage not in ("auto", "host", "device"):
+            raise ValueError("pool_storage must be 'auto', 'host', or "
+                             "'device'")
         if self.insert_backend == "pallas" and not (self.use_ob and
                                                     self.batched_ingest):
             raise ValueError("the pallas insert backend requires use_ob "

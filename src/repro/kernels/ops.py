@@ -147,11 +147,18 @@ def xla_entry_points():
                            {"r": r, "interpret": True})]
         return leaf_insert, ("r", "interpret"), cases
 
-    def build_leaf_insert_batched():
-        # two pow2 leaf-axis buckets = two declared compile keys
-        cases = [TraceCase(f"L{L}_n{n}", (node((L,)), *chunk((L,))),
-                           {"r": r, "interpret": True}) for L in (4, 8)]
-        return leaf_insert_batched, ("r", "interpret"), cases
+    def build_ingest_fused():
+        from repro.kernels.pipeline import _ingest_step
+        cap = 64
+        slabs = tuple(node((cap,)))
+        kw = {"r": r, "F1": p.F1, "d1": d, "b": b, "seed": p.seed,
+              "interpret": True}
+        cases = [TraceCase(f"L{L}_n{n}",
+                           (*slabs, sds((4, L, n), u32), sds((L,), i32),
+                            sds((), i32), sds((), i32)), dict(kw))
+                 for L in (4, 8)]
+        return _ingest_step, ("r", "F1", "d1", "b", "seed",
+                              "interpret"), cases
 
     def probe_args(m, q):
         return (node((m,)), sds((m,), jnp.bool_), sds((q,), u32),
@@ -218,8 +225,12 @@ def xla_entry_points():
         EntryPoint("kernels.leaf_insert", build_leaf_insert,
                    host_args=(5, 6, 7), fetch_output=True,
                    expected_compile_keys=1, tags=interp),
-        EntryPoint("kernels.leaf_insert_batched", build_leaf_insert_batched,
-                   host_args=(5, 6, 7), fetch_output=True,
+        # the production pallas drain: device-resident pool slabs are
+        # donated, only the packed raw staging block + per-leaf lengths
+        # cross h2d and nothing returns but the small spill mask
+        # (fetched separately, outside this launch's output contract)
+        EntryPoint("kernels.ingest_fused", build_ingest_fused,
+                   host_args=(5, 6, 7, 8), fetch_output=False,
                    expected_compile_keys=2, tags=interp),
         EntryPoint("kernels.edge_probe", build_edge_probe,
                    host_args=tuple(range(8)), fetch_output=True,

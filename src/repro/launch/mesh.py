@@ -37,6 +37,13 @@ def make_shard_mesh(n_shards: int):
     return compat.make_mesh((k,), ("shard",), devices=jax.devices()[:k])
 
 
+def make_single_shard_mesh():
+    """1-D single-device ``("shard",)`` mesh — the degenerate fallback
+    that lets ``ShardedHiggs(parallel="shard_map")`` exercise the real
+    ``shard_map`` dispatch path on one-device hosts (CPU CI)."""
+    return compat.make_mesh((1,), ("shard",))
+
+
 def dp_axes(mesh) -> tuple:
     """Batch-sharding axes for a mesh (('pod','data') multi-pod)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

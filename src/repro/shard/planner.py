@@ -4,7 +4,11 @@ Routing rules (see :mod:`repro.shard.partition`):
 
 * Edge-lowered queries (``EdgeQuery``/``PathQuery``/``SubgraphQuery``)
   route **per edge** by ``shard_of(src)`` — each edge lives in exactly
-  one shard, so the merge is a scatter, not a sum.
+  one shard, so the per-edge routing matrix is one-hot and the routed
+  sum is a scatter in disguise.  The probe itself is *stacked*: per
+  (level, time-range class) every owning shard's nodes are gathered
+  once and probed with one
+  :func:`repro.kernels.ops.edge_probe_stacked` launch.
 * ``VertexQuery(direction="out")`` routes by ``shard_of(v)`` the same
   way.
 * ``VertexQuery(direction="in")`` fans out: in-edges of a vertex are
@@ -28,8 +32,8 @@ from typing import TYPE_CHECKING
 
 import numpy as np
 
-from repro.api.queries import (EDGE_LOWERED, EdgeQuery, QueryBatch,
-                               QueryResult, QueryStats, VertexQuery)
+from repro.api.queries import (EDGE_LOWERED, QueryBatch, QueryResult,
+                               QueryStats, VertexQuery)
 from repro.core import cmatrix
 from repro.core.cmatrix import pow2_pad as _pow2_pad
 from repro.shard.partition import shard_of
@@ -61,6 +65,7 @@ class ShardedQueryPlanner:
         recs: list[list] = [[] for _ in range(S)]    # (qi, scatter idx)
         acc: dict[int, np.ndarray] = {}              # qi -> per-item values
         fanin: dict[tuple[int, int], list] = {}      # (ts, te) -> [(qi, v)]
+        fanin_e: dict[tuple[int, int], list] = {}    # (ts,te)->[(qi,src,dst)]
 
         for qi, q in enumerate(queries):
             if isinstance(q, EDGE_LOWERED):
@@ -68,12 +73,7 @@ class ShardedQueryPlanner:
                 if len(src) == 0:
                     values[qi] = q.reduce(np.zeros((0,), np.float64))
                     continue
-                acc[qi] = np.zeros((len(src),), np.float64)
-                sids = shard_of(src, S, sm.params.seed)
-                for s in np.unique(sids):
-                    idx = np.nonzero(sids == s)[0]
-                    sub[s].append(EdgeQuery(src[idx], dst[idx], q.ts, q.te))
-                    recs[s].append((qi, idx))
+                fanin_e.setdefault((q.ts, q.te), []).append((qi, src, dst))
             elif isinstance(q, VertexQuery):
                 if q.direction == "out":
                     acc[qi] = np.zeros((len(q.v),), np.float64)
@@ -99,6 +99,16 @@ class ShardedQueryPlanner:
             for (qi, idx), val in zip(recs[s], res.values):
                 acc[qi][idx] = np.asarray(val, np.float64)
 
+        for (ts, te), jobs in fanin_e.items():
+            src = np.concatenate([s_ for _, s_, _ in jobs])
+            dst = np.concatenate([d_ for _, _, d_ in jobs])
+            out, used = self._fanin_edge(src, dst, ts, te, stats)
+            touched |= used
+            off = 0
+            for qi, s_, _ in jobs:
+                acc[qi] = out[off:off + len(s_)]
+                off += len(s_)
+
         for (ts, te), jobs in fanin.items():
             vs = np.concatenate([v for _, v in jobs])
             out, used = self._fanin_vertex(vs, ts, te, stats)
@@ -116,6 +126,110 @@ class ShardedQueryPlanner:
         stats.shards_touched = int(touched.sum())
         self.lifetime.merge(stats)
         return QueryResult(values, stats)
+
+    # ------------------------------------------------------------------
+    # stacked fan-in probe for edge-lowered queries
+    # ------------------------------------------------------------------
+
+    def _fanin_edge(self, src: np.ndarray, dst: np.ndarray, ts: int,
+                    te: int, stats: QueryStats):
+        """(q,) edge answers over the owning shards, plus the (S,) mask
+        of shards that contributed any probe.
+
+        Each edge lives in exactly one shard (``shard_of(src)``), so the
+        routing matrix is one-hot per column and the routed sum
+        degenerates to the legacy per-shard scatter — bit-identically:
+        each query's probe reduces over its own padded node axis alone,
+        and the cross-shard combine adds exact zeros.  What changes is
+        the launch shape: per (level, range class) the fleet issues ONE
+        :func:`repro.kernels.ops.edge_probe_stacked` dispatch instead of
+        one per shard, the same contract `_fanin_vertex` already keeps.
+        """
+        sm = self.summary
+        S = sm.n_shards
+        q = len(src)
+        sids = shard_of(src, S, sm.params.seed)
+        route = np.zeros((S, q), bool)
+        route[sids, np.arange(q)] = True
+        shard_ids = [s for s in range(S) if route[s].any()]
+        out = np.zeros((q,), np.float64)
+        used = np.zeros((S,), bool)
+        if not shard_ids:
+            return out, used
+        used[shard_ids] = True
+        # identical params across shards => identical query coordinates
+        f1s, bs = sm.shards[0]._query_coords(src, "s")
+        f1d, bd = sm.shards[0]._query_coords(dst, "d")
+
+        plans = {s: sm.shards[s].planner.plan(ts, te, stats)
+                 for s in shard_ids}
+        levels = sorted({lvl for plan, _ in plans.values() for lvl in plan})
+        for level in levels:
+            per_shard = [(s, np.asarray(plans[s][0][level]))
+                         for s in shard_ids if level in plans[s][0]]
+            out += self._probe_level_stacked_edge(
+                per_shard, route, level, f1s, bs, f1d, bd, ts, te, False,
+                stats)
+            for s, ids in per_shard:
+                ob = sm.shards[s].planner._ob_edge(
+                    level, ids, f1s, bs, f1d, bd, ts, te, False, stats)
+                out += ob * route[s]
+        filt = [(s, np.asarray(plans[s][1])) for s in shard_ids
+                if plans[s][1]]
+        if filt:
+            out += self._probe_level_stacked_edge(
+                filt, route, 1, f1s, bs, f1d, bd, ts, te, True, stats)
+            for s, ids in filt:
+                ob = sm.shards[s].planner._ob_edge(
+                    1, ids, f1s, bs, f1d, bd, ts, te, True, stats)
+                out += ob * route[s]
+        return out, used
+
+    def _probe_level_stacked_edge(self, per_shard, route, level, f1s, bs,
+                                  f1d, bd, ts, te, filter_time,
+                                  stats: QueryStats):
+        """One stacked edge-probe launch over every contributing shard's
+        nodes at one (level, range class); routed (q,) float64 sum."""
+        from repro.kernels import ops
+        sm = self.summary
+        live, nodes, mask = self._stack_pools(per_shard, level)
+        q = len(np.asarray(f1s))
+        if not live:
+            return np.zeros((q,), np.float64)
+        p = sm.params
+        r = p.r if p.use_mmb else 1
+        fs_l, rows = cmatrix.coords_at_level(f1s, bs, level, p)
+        fd_l, cols = cmatrix.coords_at_level(f1d, bd, level, p)
+        stats.device_dispatches += 1
+        stats.buckets_probed += sum(len(ids) for _, ids in live) \
+            * r * r * q
+        res = sm.run_stacked(ops.edge_probe_stacked, nodes, mask, fs_l,
+                             fd_l, rows, cols, np.uint32(ts),
+                             np.uint32(te), match_time=filter_time)
+        part = np.asarray(res, np.float64)           # (k, q)
+        sel = np.stack([route[s] for s, _ in live])  # (k, q)
+        return (part * sel).sum(axis=0)
+
+    def _stack_pools(self, per_shard, level):
+        """(live list, stacked NodeState, stacked mask) for the shards
+        that have probe-able nodes at ``level`` — the shared gather half
+        of both stacked fan-in paths."""
+        import jax.numpy as jnp
+        sm = self.summary
+        live = [(s, ids) for s, ids in per_shard
+                if len(ids) and level <= len(sm.shards[s].pools)
+                and sm.shards[s].pools[level - 1].n > 0]
+        if not live:
+            return live, None, None
+        pad = _pow2_pad(max(len(ids) for _, ids in live))
+        gathered = [sm.shards[s].pools[level - 1].gather(ids, pad)
+                    for s, ids in live]
+        nodes = type(gathered[0][0])(
+            *(jnp.stack([getattr(g[0], name) for g in gathered])
+              for name in type(gathered[0][0])._fields))
+        mask = jnp.stack([g[1] for g in gathered])
+        nodes, mask = sm.place_stacked(nodes, mask)
+        return live, nodes, mask
 
     # ------------------------------------------------------------------
     # stacked fan-in probe for ``in`` direction vertex queries
@@ -164,32 +278,20 @@ class ShardedQueryPlanner:
         """One stacked launch over every contributing shard's nodes at
         one (level, range class); returns the routed (q,) float64 sum."""
         from repro.kernels import ops
-        import jax.numpy as jnp
         sm = self.summary
-        live = [(s, ids) for s, ids in per_shard
-                if len(ids) and level <= len(sm.shards[s].pools)
-                and sm.shards[s].pools[level - 1].n > 0]
+        live, nodes, mask = self._stack_pools(per_shard, level)
         q = len(np.asarray(f1))
         if not live:
             return np.zeros((q,), np.float64)
         p = sm.params
         r = p.r if p.use_mmb else 1
-        pad = _pow2_pad(max(len(ids) for _, ids in live))
-        gathered = [sm.shards[s].pools[level - 1].gather(ids, pad)
-                    for s, ids in live]
-        nodes = type(gathered[0][0])(
-            *(jnp.stack([getattr(g[0], name) for g in gathered])
-              for name in type(gathered[0][0])._fields))
-        mask = jnp.stack([g[1] for g in gathered])
-        nodes, mask = sm.place_stacked(nodes, mask)
         f_l, rows = cmatrix.coords_at_level(f1, base, level, p)
         stats.device_dispatches += 1
         stats.buckets_probed += sum(len(ids) for _, ids in live) \
             * r * p.d(level) * q
-        res = ops.vertex_probe_stacked(nodes, mask, f_l, rows,
-                                       np.uint32(ts), np.uint32(te),
-                                       direction="in",
-                                       match_time=filter_time)
+        res = sm.run_stacked(ops.vertex_probe_stacked, nodes, mask, f_l,
+                             rows, np.uint32(ts), np.uint32(te),
+                             direction="in", match_time=filter_time)
         part = np.asarray(res, np.float64)           # (k, q)
         sel = np.stack([route[s] for s, _ in live])  # (k, q)
         return (part * sel).sum(axis=0)

@@ -25,6 +25,13 @@ batched drains in parallel.  The execution mode resolves per host:
   (:func:`repro.launch.mesh.make_shard_mesh`).
 * ``"none"`` — sequential; also the S=1 degenerate case, which is
   bit-identical to an unsharded ``HiggsSketch`` end to end.
+* ``"shard_map"`` (explicit only, never auto-resolved) — sequential
+  ingest, but stacked fan-in probes dispatch through
+  :func:`repro.compat.shard_map` over a 1-D ``("shard",)`` device mesh:
+  the leading shard axis is split across devices and query operands are
+  replicated, so each device probes only its resident pool slice.  On
+  single-device hosts a degenerate 1-device mesh keeps the code path
+  live (and bit-identical to ``"none"``).
 
 The full ``GraphSummary`` protocol is implemented, so
 ``make_summary("higgs-sharded", shards=4, ...)`` drops into the
@@ -62,7 +69,7 @@ from repro.shard.partition import (DstShardMap, PartitionStats,
                                    partition_batch)
 from repro.shard.planner import ShardedQueryPlanner
 
-_PARALLEL_MODES = ("auto", "process", "threads", "none")
+_PARALLEL_MODES = ("auto", "process", "threads", "none", "shard_map")
 
 
 class ShardedHiggs(LegacyQueryMixin):
@@ -103,7 +110,12 @@ class ShardedHiggs(LegacyQueryMixin):
         self.partition_stats = PartitionStats(n_shards=self.n_shards)
         self.planner = ShardedQueryPlanner(self)
         self.mesh = None
-        if self.n_shards > 1:
+        if parallel == "shard_map":
+            from repro.launch.mesh import (make_shard_mesh,
+                                           make_single_shard_mesh)
+            self.mesh = (make_shard_mesh(self.n_shards)
+                         or make_single_shard_mesh())
+        elif self.n_shards > 1:
             from repro.launch.mesh import make_shard_mesh
             self.mesh = make_shard_mesh(self.n_shards)
         self._mode = self._resolve_parallel()
@@ -125,7 +137,12 @@ class ShardedHiggs(LegacyQueryMixin):
         # jitted jax computations, which must not run post-fork.
         p = self.params
         forkable = (self._shards[0]._backend == "host"
+                    and self._shards[0]._storage == "host"
                     and p.batched_ingest and p.use_ob)
+        if mode == "shard_map":
+            # explicit opt-in only: ingest is sequential, probes go
+            # through the mesh dispatch (see run_stacked)
+            return mode
         if mode == "auto":
             if self.n_shards == 1 or cores == 1:
                 return "none"
@@ -223,6 +240,34 @@ class ShardedHiggs(LegacyQueryMixin):
             return nodes, mask         # unpadded remainder: keep local
         spec = NamedSharding(self.mesh, PartitionSpec("shard"))
         return (jax.device_put(nodes, spec), jax.device_put(mask, spec))
+
+    def run_stacked(self, fn, nodes, mask, *args, **static):
+        """Launch a stacked (k, ...) probe ``fn(nodes, mask, *args)``.
+
+        Normal modes call the jitted wrapper directly (XLA partitions a
+        mesh-placed batch on its own).  ``"shard_map"`` mode makes the
+        partitioning explicit: the leading shard axis splits across the
+        1-D ``("shard",)`` mesh, query operands replicate, and each
+        device vmaps only its resident pool slice — arithmetic is
+        per-shard-independent, so the stacked (k, q) output is
+        bit-identical to the plain launch.  Falls back to the plain
+        launch when the leading axis doesn't divide the mesh."""
+        if self._mode != "shard_map":
+            return fn(nodes, mask, *args, **static)
+        import functools
+
+        from jax.sharding import PartitionSpec
+
+        from repro import compat
+        ndev = self.mesh.devices.size
+        if nodes.fp_s.shape[0] % ndev:
+            return fn(nodes, mask, *args, **static)
+        shard, rep = PartitionSpec("shard"), PartitionSpec()
+        mapped = compat.shard_map(
+            functools.partial(fn, **static), mesh=self.mesh,
+            in_specs=(shard, shard) + (rep,) * len(args),
+            out_specs=shard)
+        return mapped(nodes, mask, *args)
 
     # ------------------------------------------------------------------
     # GraphSummary surface

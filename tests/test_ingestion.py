@@ -54,14 +54,22 @@ def assert_sketch_equal(a, b, tag=""):
 
 class TestSerialBatchedEquivalence:
     """Acceptance: batched ingestion is bit-identical to the per-leaf
-    reference over random streams including oversize timestamp runs."""
+    reference over random streams including oversize timestamp runs.
+
+    The batched side pins ``insert_backend="host"``: these tests gate
+    the host drain engine against the serial reference, and must keep
+    doing so when the CI matrix flips ``HIGGS_INSERT_BACKEND=pallas``
+    (the pallas backend skips host premerge by design — its own
+    equivalence class is the device/host *storage* bit-identity in
+    test_device_pool.py)."""
 
     @pytest.mark.parametrize("seed,chunks", [(0, 1), (1, 5), (2, 3)])
     def test_random_streams(self, seed, chunks):
         stream = make_stream(1500, 60, 2000, seed)
         ref = build(HiggsParams(batched_ingest=False, **PARAMS_SMALL),
                     stream, chunks)
-        got = build(HiggsParams(**PARAMS_SMALL), stream, chunks)
+        got = build(HiggsParams(insert_backend="host", **PARAMS_SMALL),
+                    stream, chunks)
         assert_sketch_equal(ref, got, f"seed={seed}")
 
     def test_oversize_timestamp_runs(self):
@@ -69,7 +77,8 @@ class TestSerialBatchedEquivalence:
         stream = make_stream(900, 40, 6, 3)
         ref = build(HiggsParams(batched_ingest=False, **PARAMS_SMALL),
                     stream, 4)
-        got = build(HiggsParams(**PARAMS_SMALL), stream, 4)
+        got = build(HiggsParams(insert_backend="host", **PARAMS_SMALL),
+                    stream, 4)
         assert_sketch_equal(ref, got, "oversize runs")
         assert ref.ob.total_entries() > 0          # OB case exercised
 

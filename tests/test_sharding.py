@@ -158,7 +158,9 @@ class TestPerShardBitEquality:
     @needs_fork
     def test_process_engine_bit_identical(self):
         stream = make_stream(4000, 64, 1500, 2)
-        p = HiggsParams(**PARAMS_SMALL)
+        # pinned: forked workers need the jax-free host drain even when
+        # the CI matrix exports HIGGS_INSERT_BACKEND=pallas
+        p = HiggsParams(insert_backend="host", **PARAMS_SMALL)
         seq = ShardedHiggs(shards=3, parallel="none", params=p)
         par = ShardedHiggs(shards=3, parallel="process", params=p)
         for sk in (seq, par):
@@ -174,7 +176,7 @@ class TestPerShardBitEquality:
         """A read between inserts syncs worker state exactly (pending
         buffers included) and ingestion continues in the workers."""
         stream = make_stream(3000, 50, 900, 4)
-        p = HiggsParams(**PARAMS_SMALL)
+        p = HiggsParams(insert_backend="host", **PARAMS_SMALL)
         seq = ShardedHiggs(shards=2, parallel="none", params=p)
         par = ShardedHiggs(shards=2, parallel="process", params=p)
         half = 1500
@@ -332,6 +334,32 @@ class TestStackedProbes:
                 n_s, m_s, fs_l, fd_l, rows, cols, np.uint32(0),
                 np.uint32(t_max), match_time=False))
             np.testing.assert_array_equal(got[s], want)
+
+
+class TestShardMapMode:
+    """``parallel="shard_map"``: stacked probes dispatched through an
+    explicit ``shard_map`` over the 1-D shard mesh stay bit-identical
+    to the sequential launch (single-device mesh on CPU CI)."""
+
+    def test_bit_identical_to_sequential(self):
+        t_max = 1000
+        stream = make_stream(4000, 48, t_max, 11)
+        seq = ShardedHiggs(shards=4, parallel="none", **PARAMS_SMALL)
+        sm = ShardedHiggs(shards=4, parallel="shard_map", **PARAMS_SMALL)
+        for sk in (seq, sm):
+            sk.insert(*stream)
+            sk.flush()
+        assert sm._mode == "shard_map" and sm.mesh is not None
+        for i in range(4):
+            assert_shard_equal(seq.shards[i], sm.shards[i], f"shard {i}")
+        batch = query_batch(stream, t_max)
+        va, vb = seq.query(batch).values, sm.query(batch).values
+        for i, (a, b) in enumerate(zip(va, vb)):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), i
+
+    def test_never_auto_resolved(self):
+        sh = ShardedHiggs(shards=2, parallel="auto", **PARAMS_SMALL)
+        assert sh._mode in ("process", "threads", "none")
 
 
 class TestShardedPersistence:
