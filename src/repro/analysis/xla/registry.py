@@ -25,6 +25,7 @@ BUILTIN_HOOK_MODULES = (
     "repro.kernels.ops",
     "repro.api.planner",
     "repro.launch.steps",
+    "repro.serve.service",
 )
 
 

@@ -1,0 +1,90 @@
+"""``SummaryHandle`` — the single public entry point to a summary.
+
+``make_summary``/``restore_summary`` return a handle instead of the raw
+implementation class.  The handle *is* a ``GraphSummary`` (it forwards
+the full protocol — and, transparently, every implementation-specific
+attribute — to the wrapped summary), but its own surface is the curated
+session API:
+
+* :meth:`query` — typed batches, the one read path;
+* :meth:`save` / :meth:`restore` — atomic snapshot round-trip;
+* :meth:`snapshot_epoch` — pin an immutable read epoch;
+* :meth:`serve` — construct a :class:`~repro.serve.service.SummaryService`
+  session for concurrent callers.
+
+Delegation is total in both directions (``__getattr__`` *and*
+``__setattr__``), so pre-handle code that reached into implementation
+attributes — ``sk.pools``, ``sk.probe_counter = 0`` — keeps working
+unchanged, and ``isinstance(handle, GraphSummary)`` holds.  Legacy
+per-method queries forwarded through the handle still emit their
+``DeprecationWarning`` (the shim lives on the wrapped class).
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+from repro.api.queries import QueryBatch, QueryResult
+
+if TYPE_CHECKING:
+    from repro.serve.service import SummaryService
+
+
+class SummaryHandle:
+    """Thin total-delegation façade over one wrapped ``GraphSummary``."""
+
+    __slots__ = ("_summary",)
+
+    def __init__(self, summary):
+        object.__setattr__(self, "_summary", summary)
+
+    # -- curated surface -------------------------------------------------
+
+    @property
+    def summary(self):
+        """The wrapped implementation object (escape hatch)."""
+        return self._summary
+
+    def query(self, queries: QueryBatch) -> QueryResult:
+        return self._summary.query(queries)
+
+    def save(self, directory: str, step: int) -> str:
+        return self._summary.save(directory, step)
+
+    def restore(self, directory: str, step: int | None = None) -> None:
+        return self._summary.restore(directory, step)
+
+    def snapshot_epoch(self):
+        from repro.serve.epoch import ReadEpoch
+        return ReadEpoch.pin(self._summary)
+
+    def serve(self, *, readers: int = 2,
+              coalesce_max: int = 64) -> "SummaryService":
+        """A concurrent serving session over this summary::
+
+            async with handle.serve(readers=4) as svc:
+                res = await svc.submit([EdgeQuery(src, dst, ts, te)])
+        """
+        from repro.serve.service import SummaryService
+        return SummaryService(self._summary, readers=readers,
+                              coalesce_max=coalesce_max)
+
+    # -- total delegation ------------------------------------------------
+
+    @property
+    def __class__(self):
+        # isinstance(handle, HiggsSketch) (and any other concrete-class
+        # check) sees through the façade; use type(x) to detect the
+        # handle itself and `.summary` to unwrap
+        return type(self._summary)
+
+    def __getattr__(self, name: str):
+        return getattr(self._summary, name)
+
+    def __setattr__(self, name: str, value) -> None:
+        setattr(self._summary, name, value)
+
+    def __delattr__(self, name: str) -> None:
+        delattr(self._summary, name)
+
+    def __repr__(self) -> str:
+        return f"SummaryHandle({self._summary!r})"

@@ -45,6 +45,21 @@ if TYPE_CHECKING:  # avoid a circular import; higgs imports this module
     from repro.core.higgs import HiggsSketch
 
 
+def _pad_q(a, q: int) -> np.ndarray:
+    """Zero-pad a (q,)-shaped query-coordinate array to its pow2 bucket.
+
+    Probes are pure reads, so the padded lanes compute garbage that the
+    caller slices away; what matters is that a serving workload with
+    variable coalesced batch sizes reuses O(log q) compile keys instead
+    of one per distinct q (higgsxla rule X2).  Only the leading (query)
+    axis pads — row-coordinate arrays are (q, r)."""
+    a = np.asarray(a)
+    qp = _pow2_pad(q)
+    if qp == q:
+        return a
+    return np.pad(a, [(0, qp - q)] + [(0, 0)] * (a.ndim - 1))
+
+
 # ---------------------------------------------------------------------------
 # fused probe launches
 # ---------------------------------------------------------------------------
@@ -174,7 +189,8 @@ class QueryPlanner:
                 off += len(x)
 
         self.lifetime.merge(stats)
-        return QueryResult(values, stats)
+        return QueryResult(values, stats,
+                           epoch=int(self.sketch.structure_version))
 
     # ------------------------------------------------------------------
     # batched probes: one gather + one kernel launch per (level, class)
@@ -232,19 +248,20 @@ class QueryPlanner:
             return 0.0
         p = sk.params
         r = p.r if p.use_mmb else 1
+        q = len(np.asarray(f1s))
         stats.device_dispatches += 1
-        stats.buckets_probed += len(ids) * r * r * len(np.asarray(f1s))
+        stats.buckets_probed += len(ids) * r * r * q
         pool = sk.pools[level - 1]
         idx, mask = pool.gather_ids(ids, _pow2_pad(len(ids)))
         res = _edge_probe_fused(pool.device_view(), idx, mask,
-                                jnp.asarray(f1s, jnp.uint32),
-                                jnp.asarray(bs, jnp.uint32),
-                                jnp.asarray(f1d, jnp.uint32),
-                                jnp.asarray(bd, jnp.uint32),
+                                jnp.asarray(_pad_q(f1s, q), jnp.uint32),
+                                jnp.asarray(_pad_q(bs, q), jnp.uint32),
+                                jnp.asarray(_pad_q(f1d, q), jnp.uint32),
+                                jnp.asarray(_pad_q(bd, q), jnp.uint32),
                                 np.uint32(ts), np.uint32(te),
                                 level=level, params=p,
                                 match_time=filter_time)
-        return np.asarray(res, np.float64)
+        return np.asarray(res, np.float64)[:q]
 
     def _probe_level_vertex(self, level, ids, f1, base, ts, te, direction,
                             filter_time, stats: QueryStats):
@@ -254,19 +271,20 @@ class QueryPlanner:
             return 0.0
         p = sk.params
         r = p.r if p.use_mmb else 1
+        q = len(np.asarray(f1))
         stats.device_dispatches += 1
-        stats.buckets_probed += len(ids) * r * p.d(level) * \
-            len(np.asarray(f1))
+        stats.buckets_probed += len(ids) * r * p.d(level) * q
         pool = sk.pools[level - 1]
         idx, mask = pool.gather_ids(ids, _pow2_pad(len(ids)))
         res = _vertex_probe_fused(pool.device_view(), idx, mask,
-                                  jnp.asarray(f1, jnp.uint32),
-                                  jnp.asarray(base, jnp.uint32),
+                                  jnp.asarray(_pad_q(f1, q), jnp.uint32),
+                                  jnp.asarray(_pad_q(base, q),
+                                              jnp.uint32),
                                   np.uint32(ts), np.uint32(te),
                                   level=level, params=p,
                                   direction=direction,
                                   match_time=filter_time)
-        return np.asarray(res, np.float64)
+        return np.asarray(res, np.float64)[:q]
 
     # -- host-side overflow-block probes ---------------------------------
     # (also composed by repro.shard.planner.ShardedQueryPlanner, whose

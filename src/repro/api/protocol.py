@@ -22,6 +22,7 @@ adapter mixins that bridge the batched and pointwise query surfaces.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Protocol, runtime_checkable
 
 import numpy as np
@@ -29,6 +30,20 @@ import numpy as np
 from repro.api.queries import (EdgeQuery, PathQuery, Query, QueryBatch,
                                QueryResult, QueryStats, SubgraphQuery,
                                VertexQuery)
+
+
+def _warn_legacy(method: str, replacement: str) -> None:
+    """One deprecation message format for every per-method shim.
+
+    ``stacklevel=3`` attributes the warning to the shim's caller (level
+    1 is this helper, 2 the shim itself)."""
+    warnings.warn(
+        f"{method}() is deprecated: build a typed batch and call "
+        f"summary.query([{replacement}(...)]) instead — one call plans "
+        f"and probes the whole batch and returns per-execution "
+        f"QueryStats.  See the migration table and deprecation "
+        f"schedule in docs/API.md.",
+        DeprecationWarning, stacklevel=3)
 
 
 @runtime_checkable
@@ -71,6 +86,12 @@ class GraphSummary(Protocol):
 
     def restore(self, directory: str, step: int) -> None:
         """Rebuild this summary bit-identically from a snapshot."""
+        ...
+
+    def snapshot_epoch(self):
+        """Pin an immutable read epoch (``repro.serve.epoch.ReadEpoch``)
+        whose answers stay bit-identical to quiescing the summary at
+        this instant, no matter what the writer ingests afterwards."""
         ...
 
 
@@ -123,6 +144,14 @@ class SnapshotMixin:
                                             expect_kind=self.snapshot_kind)
         self.load_state(arrays, metadata["state"])
 
+    def snapshot_epoch(self):
+        """Default read-epoch pin: summaries with a specialized
+        zero-copy ``_pin_replica`` (HIGGS, the sharded fleet) use it;
+        everything else deep-copies through the snapshot codec — slower,
+        but the same immutability contract."""
+        from repro.serve.epoch import ReadEpoch
+        return ReadEpoch.pin(self)
+
 
 def _dispatch_pointwise(summary, q: Query):
     if isinstance(q, EdgeQuery):
@@ -141,12 +170,17 @@ def _dispatch_pointwise(summary, q: Query):
 
 
 class _CompoundShims:
-    """Compound queries as single-element batches over ``query()``."""
+    """Compound queries as single-element batches over ``query()``.
+
+    Deprecated (with the rest of the per-method surface): callers
+    should submit typed batches through ``query()`` directly."""
 
     def path_query(self, path_vertices, ts: int, te: int) -> float:
+        _warn_legacy("path_query", "PathQuery")
         return self.query([PathQuery(path_vertices, ts, te)]).values[0]
 
     def subgraph_query(self, edges, ts: int, te: int) -> float:
+        _warn_legacy("subgraph_query", "SubgraphQuery")
         return self.query([SubgraphQuery(edges, ts, te)]).values[0]
 
 
@@ -162,11 +196,18 @@ class PointwiseQueryMixin(SnapshotMixin, _CompoundShims):
 
 
 class LegacyQueryMixin(SnapshotMixin, _CompoundShims):
-    """Legacy per-method API as thin shims over batched ``query()``."""
+    """Legacy per-method API as thin shims over batched ``query()``.
+
+    Deprecated: each shim emits a ``DeprecationWarning`` pointing at the
+    typed-batch surface (docs/API.md has the migration table and the
+    removal schedule).  Internal code never calls these — they exist
+    solely for pre-PR-9 callers."""
 
     def edge_query(self, src, dst, ts: int, te: int) -> np.ndarray:
+        _warn_legacy("edge_query", "EdgeQuery")
         return self.query([EdgeQuery(src, dst, ts, te)]).values[0]
 
     def vertex_query(self, v, ts: int, te: int,
                      direction: str = "out") -> np.ndarray:
+        _warn_legacy("vertex_query", "VertexQuery")
         return self.query([VertexQuery(v, ts, te, direction)]).values[0]

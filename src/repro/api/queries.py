@@ -125,6 +125,19 @@ class QueryStats:
     probe kind.  ``buckets_probed`` is the hardware-independent structural
     counter the benchmarks report (same semantics as the old
     ``probe_counter``).
+
+    Composition is **associative** in both directions a coalesced batch
+    fans out (callers and shards):
+
+    * :meth:`merge` combines two *distinct* executions (or two callers'
+      attributed results) — every counter sums, including ``n_queries``.
+    * :meth:`absorb` folds a fan-out *sub-execution* into its parent —
+      work counters sum but ``n_queries`` does not, because sub-batches
+      are an implementation detail of one logical execution.
+    * Shards are tracked as the ``shard_mask`` bitmask (bit ``s`` = shard
+      ``s`` did work); both compositions take the union, so
+      ``shards_touched`` (its popcount) never double-counts a shard that
+      two sub-executions both probed.
     """
     n_queries: int = 0
     boundary_searches: int = 0
@@ -132,12 +145,30 @@ class QueryStats:
     device_dispatches: int = 0
     buckets_probed: int = 0
     ob_probes: int = 0          # host-side overflow-block scans
-    shards_touched: int = 0     # shards that did any work (sharded fleet)
+    shard_mask: int = 0         # bitmask of shards that did any work
+    coalesced: int = 0          # callers sharing this execution (serving)
+
+    # counters that sum under BOTH compositions (everything except the
+    # query attribution, the shard union and the coalescing fan-in)
+    _WORK = ("boundary_searches", "plan_cache_hits", "device_dispatches",
+             "buckets_probed", "ob_probes")
+
+    @property
+    def shards_touched(self) -> int:
+        """Shards that did any work — the popcount of ``shard_mask``."""
+        return int(self.shard_mask).bit_count()
+
+    def absorb(self, other: "QueryStats") -> None:
+        """Fold a fan-out sub-execution into this (parent) execution."""
+        for f in self._WORK:
+            setattr(self, f, getattr(self, f) + getattr(other, f))
+        self.shard_mask |= other.shard_mask
+        self.coalesced = max(self.coalesced, other.coalesced)
 
     def merge(self, other: "QueryStats") -> None:
-        for f in dataclasses.fields(self):
-            setattr(self, f.name,
-                    getattr(self, f.name) + getattr(other, f.name))
+        """Combine a distinct execution's (or caller's) accounting."""
+        self.absorb(other)
+        self.n_queries += other.n_queries
 
 
 @dataclasses.dataclass
@@ -146,9 +177,13 @@ class QueryResult:
 
     ``values[i]`` is a float64 array for Edge/VertexQuery and a float for
     Path/SubgraphQuery — exactly what the legacy per-method API returned.
+    ``epoch`` is the read epoch the answers were served from (the
+    summary's ``structure_version`` at execution time); ``None`` when the
+    executing surface predates epoch stamping.
     """
     values: list
     stats: QueryStats
+    epoch: int | None = None
 
     def __len__(self) -> int:
         return len(self.values)

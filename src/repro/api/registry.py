@@ -29,10 +29,12 @@ def available_summaries() -> tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
-def make_summary(name: str, **kw) -> GraphSummary:
-    """Instantiate a registered summary.  Keyword arguments go to the
-    factory (e.g. ``make_summary("higgs", d1=16, F1=19)`` or
-    ``make_summary("horae", l_bits=12, cpt=True)``)."""
+def build_summary(name: str, **kw) -> GraphSummary:
+    """Instantiate the raw implementation object for a registered name.
+
+    Internal constructor — public callers should use :func:`make_summary`,
+    which wraps the result in a :class:`~repro.api.handle.SummaryHandle`.
+    """
     key = _norm(name)
     if key not in _REGISTRY:
         raise KeyError(f"unknown summary {name!r}; "
@@ -40,17 +42,32 @@ def make_summary(name: str, **kw) -> GraphSummary:
     return _REGISTRY[key](**kw)
 
 
+def make_summary(name: str, **kw) -> GraphSummary:
+    """Build a registered summary and return its session façade.  Keyword
+    arguments go to the factory (e.g. ``make_summary("higgs", d1=16,
+    F1=19)`` or ``make_summary("horae", l_bits=12, cpt=True)``).
+
+    The returned :class:`~repro.api.handle.SummaryHandle` satisfies
+    ``GraphSummary`` and transparently forwards implementation
+    attributes, so it drops into any pre-handle call site; its own
+    surface adds ``snapshot_epoch()`` and ``serve()``."""
+    from repro.api.handle import SummaryHandle
+    return SummaryHandle(build_summary(name, **kw))
+
+
 def restore_summary(directory: str, step: int | None = None) -> GraphSummary:
     """Rebuild a summary from a snapshot without knowing its class: the
     manifest records the registry name and constructor config, so
     ``restore_summary(ckpt_dir)`` reconstructs whatever was saved there
-    (``step=None`` picks the latest snapshot)."""
+    (``step=None`` picks the latest snapshot).  Returns a
+    :class:`~repro.api.handle.SummaryHandle`, like :func:`make_summary`."""
+    from repro.api.handle import SummaryHandle
     from repro.checkpoint.store import load_snapshot
     arrays, metadata, _ = load_snapshot(directory, step)
     state = metadata["state"]
-    summary = make_summary(metadata["summary"], **state.get("config", {}))
+    summary = build_summary(metadata["summary"], **state.get("config", {}))
     summary.load_state(arrays, state)
-    return summary
+    return SummaryHandle(summary)
 
 
 def _make_higgs(**kw):

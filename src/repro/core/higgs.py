@@ -91,6 +91,16 @@ class _LeafIndex:
     def ends(self) -> np.ndarray:
         return self._ends[: self.n]
 
+    def pin_view(self) -> "_LeafIndex":
+        """Zero-copy clone sharing the key arrays; safe while the writer
+        only appends past ``n`` (reserve copies-on-grow) — the lifecycle
+        ``drop_prefix`` slide is excluded by the pin fast-path gate."""
+        clone = _LeafIndex.__new__(_LeafIndex)
+        clone.n = self.n
+        clone._starts = self._starts
+        clone._ends = self._ends
+        return clone
+
 
 class _OverflowStore:
     """Host-side overflow blocks: canonical entries per (level, node).
@@ -164,6 +174,19 @@ class _OverflowStore:
         for (level, node), cols in records.items():
             self.add(level, node, **cols)
 
+    def pin_view(self) -> "_OverflowStore":
+        """Clone sharing the column buffers through copied key dicts.
+
+        Writer appends either write in place past the pinned length
+        (invisible — :meth:`get` slices to the pin's own ``_len``) or
+        double capacity, which rebinds buffers in the *writer's* inner
+        dict; the pin's copied dicts keep the old buffers.  ``drop`` is
+        lifecycle-only and excluded by the pin fast-path gate."""
+        clone = _OverflowStore()
+        clone._cols = {key: dict(cols) for key, cols in self._cols.items()}
+        clone._len = dict(self._len)
+        return clone
+
 
 class HiggsSketch(LegacyQueryMixin):
     """The full HIGGS structure behind the ``GraphSummary`` protocol.
@@ -177,9 +200,10 @@ class HiggsSketch(LegacyQueryMixin):
     name = "HIGGS"
     snapshot_kind = "higgs"
     # rebuilt from params / restored via the probe_counter property —
-    # intentionally not serialized (higgslint R3)
+    # intentionally not serialized (higgslint R3); _pinned marks an
+    # epoch replica (a restored sketch is always writable again)
     _SNAPSHOT_DERIVED = ("_probe_base", "_chunk_pad", "_backend",
-                         "_storage", "_pipeline")
+                         "_storage", "_pipeline", "_pinned")
 
     def __init__(self, params: HiggsParams = HiggsParams()):
         self.params = params
@@ -200,6 +224,7 @@ class HiggsSketch(LegacyQueryMixin):
         self._probe_base = 0                       # legacy counter offset
         self.planner = QueryPlanner(self)
         self._chunk_pad = _pow2_pad(params.chunk_size, lo=64)
+        self._pinned = False                       # epoch replicas only
 
     @staticmethod
     def _resolve_backend(params: HiggsParams) -> str:
@@ -258,6 +283,70 @@ class HiggsSketch(LegacyQueryMixin):
         """Execute a typed query batch: one boundary search per distinct
         time range, one device probe per (level, range class)."""
         return self.planner.execute(queries)
+
+    # ------------------------------------------------------------------
+    # read epochs (concurrent serving surface)
+    # ------------------------------------------------------------------
+
+    def snapshot_epoch(self):
+        """Pin an immutable :class:`~repro.serve.epoch.ReadEpoch` of the
+        current (drained) state: queries against it are bit-identical to
+        quiescing the sketch at this ``structure_version``, no matter
+        what the writer drains afterwards."""
+        from repro.serve.epoch import ReadEpoch
+        return ReadEpoch.pin(self)
+
+    def epoch_info(self) -> dict:
+        """Position metadata stamped onto a pinned epoch."""
+        return {
+            "n_items": int(self.n_items),
+            "n_leaves": int(self._leaves.n),
+            "t_last": int(self._t_last),
+            "segments": self.segments.epoch_stamp(),
+        }
+
+    def _pin_replica(self) -> "HiggsSketch":
+        """Read-only replica frozen at the current ``structure_version``.
+
+        Fast path (host pool storage, dormant lifecycle): share the
+        writer's slabs zero-copy behind pinned counts — every writer
+        mutation is then either append-past-``n`` (invisible through the
+        pinned counts) or copy-on-grow (rebinds the writer's arrays,
+        leaving the pin untouched).  Device storage (whose fused drain
+        donates slab buffers) and live retention policies (whose
+        lifecycle slides retained rows in place) deep-copy through the
+        snapshot codec instead — same bits, independent storage.
+
+        The pending raw-item buffer is deliberately not carried: items
+        that have not closed a leaf are invisible to queries on the live
+        sketch too, so the replica answers exactly like the writer would
+        if it were quiesced right now.
+        """
+        if self._storage == "host" and not self.segments.active:
+            rep = object.__new__(type(self))
+            rep.params = self.params
+            rep._backend = self._backend
+            rep._storage = self._storage
+            rep._pipeline = None
+            rep.pools = [pool.pin_view() for pool in self.pools]
+            rep._leaves = self._leaves.pin_view()
+            rep.ob = self.ob.pin_view()
+            rep._buf = []
+            rep._buf_len = 0
+            rep.n_items = self.n_items
+            rep.segments = SegmentStore(self.params)
+            rep.segments.load(self.segments.meta())
+            rep._t_last = self._t_last
+            rep._version = self._version
+            rep._probe_base = 0
+            rep.planner = QueryPlanner(rep)
+            rep._chunk_pad = self._chunk_pad
+        else:
+            arrays, meta = self.state_dict()
+            rep = type(self)(self.params)
+            rep.load_state(arrays, meta)
+        rep._pinned = True
+        return rep
 
     # ------------------------------------------------------------------
     # persistence (GraphSummary snapshot surface)
@@ -357,6 +446,10 @@ class HiggsSketch(LegacyQueryMixin):
         src/dst: uint32 vertex ids; w: weights (negative = deletion);
         t: uint32 timestamps.
         """
+        if self._pinned:
+            raise RuntimeError(
+                "epoch-pinned replica is read-only; insert into the "
+                "live summary it was pinned from")
         batch = np.stack([
             np.asarray(src, np.uint32), np.asarray(dst, np.uint32),
             np.asarray(w, np.float32).view(np.uint32),
@@ -368,6 +461,10 @@ class HiggsSketch(LegacyQueryMixin):
 
     def flush(self) -> None:
         """Close the current partial leaf (end of stream / snapshot)."""
+        if self._pinned:
+            raise RuntimeError(
+                "epoch-pinned replica is read-only; flush the live "
+                "summary it was pinned from")
         self._drain(final=True)
         if self.segments.active:
             self._lifecycle()          # idempotent; a no-op drain must

@@ -357,3 +357,25 @@ class _LevelPool:
     def device_slabs(self) -> dict:
         """Raw device slab dict (fused ingest input; device storage)."""
         return self._st.device_slabs()
+
+    def pin_view(self) -> "_LevelPool":
+        """Zero-copy read-only clone sharing the live host slabs.
+
+        Valid only for host storage with a dormant segment lifecycle:
+        the writer then mutates shared slabs exclusively by appending
+        past ``n`` (invisible to the pin, which reads through its own
+        frozen ``n``) or by copy-on-grow (which rebinds the writer's
+        slab dict, leaving the pin on the old arrays).  Retention
+        slides mutate retained rows in place and would corrupt the
+        pin — :meth:`HiggsSketch._pin_replica` routes those
+        configurations through the deep snapshot path instead.
+        """
+        if self._st.kind != "host":
+            raise ValueError("pin_view requires host pool storage")
+        clone = _LevelPool(self.d, self.b, storage="host")
+        clone._st.slabs = self._st.slabs
+        clone._st.cap = self.cap
+        clone.cap = self.cap
+        clone.n = self.n
+        clone.base = self.base
+        return clone

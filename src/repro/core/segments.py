@@ -185,6 +185,17 @@ class SegmentStore:
             return 0.0
         return SEGMENT_META_BYTES * len(self.records)
 
+    def epoch_stamp(self) -> dict:
+        """Lifecycle position identifying a read epoch's window: two
+        epochs with equal stamps (and equal ``structure_version``) see
+        the same sealed prefix and the same retained fine suffix."""
+        return {
+            "n_sealed": int(self.n_sealed),
+            "n_evicted": int(self.n_evicted),
+            "n_coarse": int(self.n_coarse),
+            "fine_base_leaf": int(self.fine_base_leaf),
+        }
+
     # ------------------------------------------------------------------
     # persistence
     # ------------------------------------------------------------------

@@ -132,8 +132,9 @@ def main(argv=None):
             np.asarray(synthetic_batch(cfg, 0, args.batch,
                                        args.seq)["tokens"]).ravel()))[:4]
         mid = (start_step + step) // 2
-        q = sketch.vertex_query(hot.astype(np.uint32), start_step, mid,
-                                "out")
+        from repro.api.queries import VertexQuery
+        q = sketch.query([VertexQuery(hot.astype(np.uint32), start_step,
+                                      mid, "out")]).values[0]
         print("HIGGS telemetry: transition mass out of hottest tokens "
               f"during steps [{start_step},{mid}]: {q.round(1)}")
     guard.restore()

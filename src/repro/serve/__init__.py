@@ -1,0 +1,21 @@
+"""Concurrent query serving for graph-stream summaries.
+
+Two pieces (tested independently, composed by the service):
+
+* :mod:`repro.serve.epoch` — **read epochs**: :class:`ReadEpoch` pins an
+  immutable replica of a live summary, so queries against it are
+  bit-identical to quiescing the writer at the pin point no matter what
+  the writer drains afterwards.  HIGGS and the sharded fleet pin
+  zero-copy (shared slabs behind frozen counts); every other
+  ``GraphSummary`` deep-copies through its snapshot codec.
+* :mod:`repro.serve.service` — :class:`SummaryService`: one asyncio
+  writer task ingesting a :class:`~repro.stream.pipeline.StreamPipeline`
+  plus N reader tasks that **coalesce** all in-flight callers' typed
+  query batches into one planner execution per round — one probe launch
+  per (level, time-range class) across users, served from the current
+  read epoch.
+"""
+from repro.serve.epoch import ReadEpoch, epoch_of
+from repro.serve.service import ServiceStats, SummaryService
+
+__all__ = ["ReadEpoch", "ServiceStats", "SummaryService", "epoch_of"]

@@ -1,0 +1,107 @@
+"""Epoch-consistent snapshot reads over a live graph-stream summary.
+
+A **read epoch** is an immutable view of a summary at one instant of its
+mutation history, identified by the summary's ``structure_version`` at
+pin time.  The contract — verified bit-for-bit by the serving property
+tests — is:
+
+    every query answered by the epoch equals the answer a *quiesced*
+    summary would give after ingesting exactly the stream prefix the
+    writer had drained when the epoch was pinned,
+
+no matter how much the writer ingests, drains, aggregates or flushes
+after the pin.  Items the writer has buffered but not yet closed into a
+leaf are invisible to queries on the live summary too, so the epoch is
+not "behind" the writer in any observable way: it answers exactly like
+the writer would if it stopped right now.
+
+Pinning goes through the summary's ``_pin_replica()`` when it has one
+(:class:`~repro.core.higgs.HiggsSketch` shares its host slabs zero-copy
+behind frozen counts; :class:`~repro.shard.summary.ShardedHiggs` pins
+every shard plus a frozen routing map) and falls back to a deep copy
+through the ``state_dict``/``load_state`` snapshot codec for any other
+:class:`~repro.api.protocol.GraphSummary` — slower, but the same
+immutability contract, which is what lets the service front baselines
+and the oracle unchanged.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from repro.api.queries import QueryBatch, QueryResult
+
+
+def epoch_of(summary) -> int:
+    """The epoch id a pin of ``summary`` would carry right now.
+
+    ``structure_version`` where available (HIGGS: bumped on every tree
+    mutation, so equal ids imply identical closed-tree state), falling
+    back to ``n_items`` and then to 0 for summaries without mutation
+    accounting (those always re-pin).
+    """
+    v = getattr(summary, "structure_version", None)
+    if v is not None:
+        return int(v)
+    n = getattr(summary, "n_items", None)
+    if n is not None:
+        return int(n)
+    return 0
+
+
+@dataclasses.dataclass
+class ReadEpoch:
+    """An immutable, queryable snapshot of a summary at one epoch.
+
+    ``replica`` is the pinned read-only summary; queries go through
+    :meth:`query`, which stamps every :class:`QueryResult` with this
+    epoch's id.  ``info`` carries position metadata (item/leaf counts,
+    lifecycle stamp; the serving layer adds the writer's stream
+    ``cursor`` at pin time) so callers can tell *which* stream prefix
+    their answers describe.
+    """
+
+    epoch: int
+    replica: Any
+    info: dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def pin(cls, summary) -> "ReadEpoch":
+        """Pin the summary's current state into a new read epoch."""
+        # unwrap a SummaryHandle: the generic deep-pin path below clones
+        # via type(summary), which must be the implementation class
+        summary = getattr(summary, "_summary", summary)
+        eid = epoch_of(summary)
+        pin = getattr(summary, "_pin_replica", None)
+        if pin is not None:
+            replica = pin()
+        else:
+            # generic deep pin: every GraphSummary round-trips its full
+            # state through the snapshot codec (load_state reconfigures
+            # via __init__, so an uninitialized shell is enough).  The
+            # arrays must be copied: state_dict hands out the live
+            # internal buffers and load_state may adopt them as-is —
+            # fine for an on-disk snapshot, aliasing for an in-memory pin
+            arrays, meta = summary.state_dict()
+            arrays = {k: np.array(v, copy=True) for k, v in arrays.items()}
+            replica = object.__new__(type(summary))
+            replica.load_state(arrays, copy.deepcopy(meta))
+        info = {}
+        epoch_info = getattr(summary, "epoch_info", None)
+        if epoch_info is not None:
+            info = epoch_info()
+        return cls(epoch=eid, replica=replica, info=info)
+
+    def query(self, queries: QueryBatch) -> QueryResult:
+        """Answer a typed batch from the pinned state."""
+        res = self.replica.query(queries)
+        res.epoch = self.epoch
+        return res
+
+    def space_bytes(self) -> float:
+        """Footprint of the pinned state per the paper's accounting
+        (shared-slab pins count the shared bytes, like the writer)."""
+        return float(self.replica.space_bytes())

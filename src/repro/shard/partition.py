@@ -195,6 +195,16 @@ class DstShardMap:
                 out[s, qi] = True
         return out
 
+    def pin_view(self) -> "DstShardMap":
+        """Frozen copy for an epoch replica: consolidates pending codes
+        first, then copies the mask dict so writer updates (which mutate
+        the dict in place without bumping any version counter) can never
+        change a pinned epoch's ``in``-direction routing."""
+        self._consolidate()
+        clone = DstShardMap(self.n_shards, self.seed)
+        clone._mask = dict(self._mask)
+        return clone
+
     def __len__(self) -> int:
         self._consolidate()
         return len(self._mask)

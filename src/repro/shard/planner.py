@@ -20,11 +20,12 @@ Routing rules (see :mod:`repro.shard.partition`):
   dispatch for all shards, mirroring the single-sketch planner's
   one-dispatch-per-(level, class) contract at the fleet level.
 
-``QueryStats`` accounting: per-shard executions are merged with
-:meth:`QueryStats.merge` (so ``buckets_probed``/``ob_probes``/dispatch
-counters sum across the fleet), then ``n_queries`` is overwritten with
-the *caller's* batch size — sub-batches are an implementation detail —
-and ``shards_touched`` records how many shards did any work.
+``QueryStats`` accounting: per-shard executions are folded in with
+:meth:`QueryStats.absorb` (work counters sum across the fleet while
+``n_queries`` stays the *caller's* batch size — sub-batches are an
+implementation detail), and every shard that did any work sets its bit
+in ``shard_mask``, so merging two fleet results composes associatively:
+the union never double-counts a shard both executions probed.
 """
 from __future__ import annotations
 
@@ -32,6 +33,7 @@ from typing import TYPE_CHECKING
 
 import numpy as np
 
+from repro.api.planner import _pad_q
 from repro.api.queries import (EDGE_LOWERED, QueryBatch, QueryResult,
                                QueryStats, VertexQuery)
 from repro.core import cmatrix
@@ -95,7 +97,7 @@ class ShardedQueryPlanner:
                 continue
             touched[s] = True
             res = sm.shards[s].query(sub[s])
-            stats.merge(res.stats)
+            stats.absorb(res.stats)
             for (qi, idx), val in zip(recs[s], res.values):
                 acc[qi][idx] = np.asarray(val, np.float64)
 
@@ -122,10 +124,11 @@ class ShardedQueryPlanner:
             if values[qi] is None:
                 values[qi] = q.reduce(acc[qi])
 
-        stats.n_queries = len(queries)
-        stats.shards_touched = int(touched.sum())
+        for s in np.nonzero(touched)[0]:
+            stats.shard_mask |= 1 << int(s)
         self.lifetime.merge(stats)
-        return QueryResult(values, stats)
+        return QueryResult(values, stats,
+                           epoch=int(sm.structure_version))
 
     # ------------------------------------------------------------------
     # stacked fan-in probe for edge-lowered queries
@@ -200,13 +203,18 @@ class ShardedQueryPlanner:
         r = p.r if p.use_mmb else 1
         fs_l, rows = cmatrix.coords_at_level(f1s, bs, level, p)
         fd_l, cols = cmatrix.coords_at_level(f1d, bd, level, p)
+        # pad the query axis to a pow2 bucket so variable coalesced batch
+        # sizes (serving) reuse a bounded set of compile keys; padded
+        # lanes are sliced away, accounting stays on the true q
+        fs_l, rows, fd_l, cols = (
+            _pad_q(a, q) for a in (fs_l, rows, fd_l, cols))
         stats.device_dispatches += 1
         stats.buckets_probed += sum(len(ids) for _, ids in live) \
             * r * r * q
         res = sm.run_stacked(ops.edge_probe_stacked, nodes, mask, fs_l,
                              fd_l, rows, cols, np.uint32(ts),
                              np.uint32(te), match_time=filter_time)
-        part = np.asarray(res, np.float64)           # (k, q)
+        part = np.asarray(res, np.float64)[:, :q]    # (k, q)
         sel = np.stack([route[s] for s, _ in live])  # (k, q)
         return (part * sel).sum(axis=0)
 
@@ -286,12 +294,13 @@ class ShardedQueryPlanner:
         p = sm.params
         r = p.r if p.use_mmb else 1
         f_l, rows = cmatrix.coords_at_level(f1, base, level, p)
+        f_l, rows = _pad_q(f_l, q), _pad_q(rows, q)
         stats.device_dispatches += 1
         stats.buckets_probed += sum(len(ids) for _, ids in live) \
             * r * p.d(level) * q
         res = sm.run_stacked(ops.vertex_probe_stacked, nodes, mask, f_l,
                              rows, np.uint32(ts), np.uint32(te),
                              direction="in", match_time=filter_time)
-        part = np.asarray(res, np.float64)           # (k, q)
+        part = np.asarray(res, np.float64)[:, :q]    # (k, q)
         sel = np.stack([route[s] for s, _ in live])  # (k, q)
         return (part * sel).sum(axis=0)

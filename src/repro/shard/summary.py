@@ -85,9 +85,10 @@ class ShardedHiggs(LegacyQueryMixin):
     name = "HIGGS-sharded"
     snapshot_kind = "higgs-sharded"
     # host/runtime wiring rebuilt in __init__ plus unsaved telemetry
-    # (partition_stats) — intentionally not serialized (higgslint R3)
+    # (partition_stats) — intentionally not serialized (higgslint R3);
+    # _pinned marks an epoch replica (restored fleets are writable)
     _SNAPSHOT_DERIVED = ("partition_stats", "planner", "mesh", "_mode",
-                         "_pool")
+                         "_pool", "_pinned")
 
     def __init__(self, shards: int = 4, parallel: str = "auto",
                  params: HiggsParams | None = None, **kw):
@@ -122,6 +123,7 @@ class ShardedHiggs(LegacyQueryMixin):
         self._engine: Optional[ShardProcessEngine] = None
         self._stale = False                # workers ahead of local state
         self._pool: Optional[ThreadPoolExecutor] = None
+        self._pinned = False               # epoch replicas only
 
     # ------------------------------------------------------------------
     # parallel drive
@@ -277,6 +279,10 @@ class ShardedHiggs(LegacyQueryMixin):
         """Partition the batch by source vertex in one host pass, update
         the destination routing map, and drive every shard's batched
         drain through the resolved parallel mode."""
+        if self._pinned:
+            raise RuntimeError(
+                "epoch-pinned replica is read-only; insert into the "
+                "live summary it was pinned from")
         sids, parts = partition_batch(src, dst, w, t, self.n_shards,
                                       self.params.seed)
         self.partition_stats.record(
@@ -293,6 +299,10 @@ class ShardedHiggs(LegacyQueryMixin):
         self._map_shards(lambda sh, part: sh.insert(*part), jobs)
 
     def flush(self) -> None:
+        if self._pinned:
+            raise RuntimeError(
+                "epoch-pinned replica is read-only; flush the live "
+                "summary it was pinned from")
         if self._mode == "process" and self._engine is not None:
             # workers close their pending leaves; pulling their (now
             # larger) state stays lazy — a flush with no read after it
@@ -306,6 +316,51 @@ class ShardedHiggs(LegacyQueryMixin):
     def query(self, queries: QueryBatch) -> QueryResult:
         self._sync()
         return self.planner.execute(queries)
+
+    # ------------------------------------------------------------------
+    # read epochs (concurrent serving surface)
+    # ------------------------------------------------------------------
+
+    def snapshot_epoch(self):
+        """Pin an immutable :class:`~repro.serve.epoch.ReadEpoch` of the
+        fleet: per-shard pinned replicas plus a frozen copy of the
+        destination routing map, so the coalesced batch fans through the
+        stacked probe path against one consistent fleet state."""
+        from repro.serve.epoch import ReadEpoch
+        return ReadEpoch.pin(self)
+
+    def epoch_info(self) -> dict:
+        """Position metadata stamped onto a pinned epoch."""
+        self._sync()
+        return {
+            "n_items": int(self.n_items),
+            "n_leaves": int(self.n_leaves),
+            "shards": [sh.epoch_info() for sh in self._shards],
+        }
+
+    def _pin_replica(self) -> "ShardedHiggs":
+        """Read-only fleet replica at the current ``structure_version``:
+        per-shard pins (zero-copy where each shard's storage allows it)
+        plus a frozen routing-map copy.  Process-mode workers are synced
+        first, so the pin observes the exact current fleet state."""
+        self._sync()
+        rep = object.__new__(type(self))
+        rep.params = self.params
+        rep.n_shards = self.n_shards
+        rep.parallel = self.parallel
+        rep._shards = [sh._pin_replica() for sh in self._shards]
+        rep.dst_map = self.dst_map.pin_view()
+        rep.partition_stats = PartitionStats(n_shards=self.n_shards)
+        rep.planner = ShardedQueryPlanner(rep)
+        rep.mesh = self.mesh
+        # replicas never ingest; keep the explicit mesh-dispatch probe
+        # path, drop the ingest-only parallel modes
+        rep._mode = "shard_map" if self._mode == "shard_map" else "none"
+        rep._engine = None
+        rep._stale = False
+        rep._pool = None
+        rep._pinned = True
+        return rep
 
     def space_bytes(self) -> float:
         """Fleet total: per-shard sketches plus the secondary

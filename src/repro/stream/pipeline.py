@@ -74,6 +74,20 @@ class StreamPipeline:
             if stats_fn is not None:
                 on_retention(self.cursor, stats_fn())
 
+    def feed_steps(self, sketch: "GraphSummary",
+                   align: bool = True) -> Iterator[int]:
+        """Incremental :meth:`feed`: insert one batch per step and yield
+        the advanced cursor, leaving flush/quiesce decisions to the
+        caller.  This is the writer-side surface the concurrent serving
+        layer (:class:`~repro.serve.service.SummaryService`) drives — it
+        interleaves ingestion steps with epoch pins and must know exactly
+        which stream prefix each pinned epoch covers, which is what the
+        yielded cursor records."""
+        batch = self._aligned_batch(sketch, align)
+        for b in self._iter_batches(batch):
+            sketch.insert(*b)
+            yield self.cursor
+
     def feed_summary(self, name: str,
                      progress: Callable[[int], None] | None = None,
                      flush: bool = True, **kw) -> "GraphSummary":

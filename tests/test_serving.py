@@ -1,0 +1,492 @@
+"""Concurrent serving layer: read-epoch immutability and bit-identity to
+a quiesced reference, deterministic caller coalescing, QueryStats
+composition laws, the SummaryHandle façade, and the legacy-shim
+deprecation warnings."""
+import asyncio
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (EdgeQuery, GraphSummary, PathQuery, QueryStats,
+                       SubgraphQuery, SummaryHandle, VertexQuery,
+                       make_summary)
+from repro.api.handle import SummaryHandle as RawHandle
+from repro.core.higgs import HiggsSketch
+from repro.core.params import HiggsParams
+from repro.serve import ReadEpoch, SummaryService, epoch_of
+from repro.stream.pipeline import StreamPipeline
+
+PARAMS = HiggsParams(d1=8, F1=22, b=3, r=4)
+
+
+def make_stream(n, n_vertices, t_max, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_vertices, n).astype(np.uint32)
+    dst = rng.integers(0, n_vertices, n).astype(np.uint32)
+    w = rng.integers(1, 10, n).astype(np.float32)
+    t = np.sort(rng.integers(0, t_max, n).astype(np.uint32))
+    return src, dst, w, t
+
+
+def probe_batch(stream, t_max):
+    """A mixed typed batch touching every query kind and direction."""
+    src, dst, _, _ = stream
+    return [EdgeQuery(src[:12], dst[:12], 0, t_max),
+            VertexQuery(src[:6], 0, t_max, "out"),
+            VertexQuery(dst[:6], 0, t_max, "in"),
+            PathQuery(src[:4], 0, t_max),
+            SubgraphQuery(np.stack([src[:5], dst[:5]], 1), 0, t_max)]
+
+
+def assert_same_values(a, b):
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def quiesced_reference(factory, stream, cursor, flushed):
+    """A fresh summary fed exactly the stream prefix a pin covered."""
+    ref = factory()
+    if cursor:
+        ref.insert(*(a[:cursor] for a in stream))
+    if flushed:
+        ref.flush()
+    return ref
+
+
+# ---------------------------------------------------------------------------
+# read epochs
+# ---------------------------------------------------------------------------
+
+class TestReadEpoch:
+    def test_pin_is_immutable_under_writer_mutation(self):
+        stream = make_stream(4096, 150, 2000, seed=3)
+        sk = HiggsSketch(PARAMS)
+        sk.insert(*(a[:2048] for a in stream))
+        batch = probe_batch(stream, 5000)
+        ep = sk.snapshot_epoch()
+        before = ep.query(batch)
+        assert before.epoch == ep.epoch
+        # writer keeps mutating: drains, cascade aggregation, flush
+        sk.insert(*(a[2048:] for a in stream))
+        sk.flush()
+        after = ep.query(batch)
+        assert_same_values(before.values, after.values)
+
+    def test_pinned_replica_rejects_writes(self):
+        stream = make_stream(1024, 64, 500, seed=4)
+        sk = HiggsSketch(PARAMS)
+        sk.insert(*stream)
+        ep = sk.snapshot_epoch()
+        with pytest.raises(RuntimeError, match="read-only"):
+            ep.replica.insert(*(a[:1] for a in stream))
+        with pytest.raises(RuntimeError, match="read-only"):
+            ep.replica.flush()
+
+    def test_zero_copy_pin_matches_quiesced_reference(self):
+        stream = make_stream(4096, 150, 2000, seed=5)
+        sk = HiggsSketch(PARAMS)
+        cut = 2048
+        sk.insert(*(a[:cut] for a in stream))
+        ep = sk.snapshot_epoch()
+        sk.insert(*(a[cut:] for a in stream))
+        ref = quiesced_reference(lambda: HiggsSketch(PARAMS), stream,
+                                 cut, flushed=False)
+        batch = probe_batch(stream, 5000)
+        assert_same_values(ep.query(batch).values, ref.query(batch).values)
+
+    def test_epoch_of_and_ids(self):
+        sk = HiggsSketch(PARAMS)
+        stream = make_stream(2048, 64, 900, seed=6)
+        sk.insert(*stream)
+        assert epoch_of(sk) == sk.structure_version
+        ep = sk.snapshot_epoch()
+        assert ep.epoch == sk.structure_version
+        assert ep.info["n_items"] == sk.n_items
+
+    def test_deep_pin_fallback_for_pointwise_baseline(self):
+        stream = make_stream(1024, 64, 500, seed=7)
+        bl = make_summary("tcm")
+        bl.insert(*(a[:512] for a in stream))
+        ep = bl.snapshot_epoch()
+        batch = [EdgeQuery(stream[0][:8], stream[1][:8], 0, 1000)]
+        before = ep.query(batch)
+        bl.insert(*(a[512:] for a in stream))
+        assert_same_values(before.values, ep.query(batch).values)
+
+    def test_sharded_pin_freezes_dst_routing(self):
+        stream = make_stream(4096, 150, 2000, seed=8)
+        sh = make_summary("higgs-sharded", shards=4, params=PARAMS)
+        sh.insert(*(a[:2048] for a in stream))
+        sh.flush()
+        batch = probe_batch(stream, 5000)
+        ep = sh.snapshot_epoch()
+        before = ep.query(batch)
+        # post-pin ingestion grows DstShardMap routing in place; the
+        # pinned epoch's in-direction fan-out must not see it
+        sh.insert(*(a[2048:] for a in stream))
+        sh.flush()
+        assert_same_values(before.values, ep.query(batch).values)
+        ref = quiesced_reference(
+            lambda: make_summary("higgs-sharded", shards=4, params=PARAMS),
+            stream, 2048, flushed=True)
+        assert_same_values(before.values, ref.query(batch).values)
+
+
+# ---------------------------------------------------------------------------
+# the service: coalescing + epoch consistency under interleaving
+# ---------------------------------------------------------------------------
+
+def run(coro):
+    return asyncio.run(coro)
+
+
+class TestSummaryService:
+    def test_gathered_callers_coalesce_into_one_round(self):
+        stream = make_stream(4096, 150, 2000, seed=9)
+        src, dst, _, _ = stream
+
+        async def main():
+            sk = make_summary("higgs", params=PARAMS)
+            sk.insert(*stream)
+            sk.flush()
+            async with SummaryService(sk, readers=2) as svc:
+                async def caller(i):
+                    lo = 8 * i
+                    return await svc.submit(
+                        [EdgeQuery(src[lo:lo + 8], dst[lo:lo + 8], 0, 5000)])
+                results = await asyncio.gather(*[caller(i) for i in range(8)])
+                return svc, results
+
+        svc, results = run(main())
+        # all 8 enqueue before any reader wakes -> exactly one round
+        assert svc.stats.rounds == 1
+        assert svc.stats.coalesced_jobs == 8
+        assert svc.stats.max_coalesce == 8
+        assert svc.stats.queries_served == 8
+        for res in results:
+            assert res.stats.coalesced == 8
+            assert res.stats.n_queries == 1
+            assert res.epoch is not None
+
+    def test_coalesced_round_shares_planner_work(self):
+        """8 same-range callers pay ONE boundary search and one probe
+        launch per level — not 8x each."""
+        stream = make_stream(4096, 150, 2000, seed=10)
+        src, dst, _, _ = stream
+
+        async def main():
+            sk = make_summary("higgs", params=PARAMS)
+            sk.insert(*stream)
+            sk.flush()
+            async with SummaryService(sk, readers=1) as svc:
+                return await asyncio.gather(
+                    *[svc.submit([EdgeQuery(src[8 * i:8 * i + 8],
+                                            dst[8 * i:8 * i + 8], 0, 5000)])
+                      for i in range(8)])
+
+        results = run(main())
+        shared = results[0].stats
+        # one execution: every caller sees the same work counters
+        for res in results[1:]:
+            assert res.stats.device_dispatches == shared.device_dispatches
+            assert res.stats.boundary_searches == shared.boundary_searches
+        assert shared.boundary_searches + shared.plan_cache_hits == 1
+
+    def test_caller_values_match_solo_execution(self):
+        stream = make_stream(4096, 150, 2000, seed=11)
+
+        async def main():
+            sk = make_summary("higgs", params=PARAMS)
+            sk.insert(*stream)
+            sk.flush()
+            batches = [probe_batch(stream, 5000) for _ in range(6)]
+            async with SummaryService(sk, readers=2) as svc:
+                results = await asyncio.gather(
+                    *[svc.submit(b) for b in batches])
+            solo = [sk.query(b) for b in batches]
+            return results, solo
+
+        results, solo = run(main())
+        for res, ref in zip(results, solo):
+            assert_same_values(res.values, ref.values)
+
+    @pytest.mark.parametrize("kind,kw", [
+        ("higgs", {"params": PARAMS}),
+        ("higgs-sharded", {"shards": 3, "params": PARAMS}),
+    ])
+    def test_interleaved_service_is_epoch_consistent(self, kind, kw):
+        """Queries racing a live writer are bit-identical to quiescing a
+        fresh summary at each answer's pinned stream cursor."""
+        stream = make_stream(6144, 150, 2000, seed=12)
+        batch = probe_batch(stream, 5000)
+
+        async def main():
+            sk = make_summary(kind, **kw)
+            pipe = StreamPipeline(*stream, batch=512)
+            async with SummaryService(sk, readers=2) as svc:
+                svc.attach_stream(pipe)
+                results = []
+                while not svc._writer_task.done():
+                    results.append(await svc.submit(batch))
+                results.append(await svc.submit(batch))
+                return svc, results
+
+        svc, results = run(main())
+        assert len(svc.epoch_log) >= 2, "writer never advanced an epoch"
+        for res in results:
+            pin = svc.epoch_log[res.epoch]
+            ref = quiesced_reference(lambda: make_summary(kind, **kw),
+                                     stream, pin["cursor"], pin["flushed"])
+            assert_same_values(res.values, ref.query(batch).values)
+
+    def test_epoch_pins_are_memoized_per_version(self):
+        stream = make_stream(4096, 150, 2000, seed=13)
+
+        async def main():
+            sk = make_summary("higgs", params=PARAMS)
+            sk.insert(*stream)
+            sk.flush()
+            async with SummaryService(sk, readers=1) as svc:
+                for _ in range(5):
+                    await svc.submit(probe_batch(stream, 5000))
+                return svc
+
+        svc = run(main())
+        # writer never moved: five rounds share one pinned epoch
+        assert svc.stats.epochs_pinned == 1
+        assert svc.stats.rounds == 5
+
+    def test_bad_query_rejects_only_that_round(self):
+        async def main():
+            sk = make_summary("higgs", params=PARAMS)
+            async with SummaryService(sk, readers=1) as svc:
+                with pytest.raises(TypeError):
+                    await svc.submit(["not a query"])
+                res = await svc.submit([EdgeQuery([1], [2], 0, 10)])
+                return res
+
+        res = run(main())
+        np.testing.assert_array_equal(res.values[0], [0.0])
+
+    def test_submit_after_stop_raises(self):
+        async def main():
+            sk = make_summary("higgs", params=PARAMS)
+            svc = SummaryService(sk)
+            await svc.start()
+            await svc.stop()
+            with pytest.raises(RuntimeError, match="stopped"):
+                await svc.submit([EdgeQuery([1], [2], 0, 10)])
+
+        run(main())
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: epoch consistency across storage x retention
+# ---------------------------------------------------------------------------
+
+pytestmark_hyp = pytest.importorskip
+
+
+class TestEpochConsistencyProperty:
+    """Random interleavings of ingest steps and epoch-pinned queries must
+    stay bit-identical to the quiesced reference, across the pool-storage
+    and retention matrix (device storage and live retention exercise the
+    deep-pin path; host/none the zero-copy path)."""
+
+    @pytest.mark.parametrize("storage", ["host", "device"])
+    @pytest.mark.parametrize("retention", ["none", "window:600"])
+    def test_interleaving_property(self, storage, retention):
+        hyp = pytest.importorskip("hypothesis")
+        st = pytest.importorskip("hypothesis.strategies")
+        params = HiggsParams(d1=8, F1=22, b=3, r=4,
+                             pool_storage=storage, retention=retention)
+        stream = make_stream(6144, 120, 1500, seed=21)
+        batch = probe_batch(stream, 5000)
+
+        @hyp.settings(max_examples=8, deadline=None,
+                      suppress_health_check=list(hyp.HealthCheck))
+        @hyp.given(schedule=st.lists(st.booleans(), min_size=4,
+                                     max_size=12))
+        def prop(schedule):
+            async def main():
+                sk = make_summary("higgs", params=params)
+                pipe = StreamPipeline(*stream, batch=512)
+                observed = []
+                async with SummaryService(sk, readers=2) as svc:
+                    svc.attach_stream(pipe, flush=False)
+                    for do_query in schedule:
+                        if do_query:
+                            observed.append(await svc.submit(batch))
+                        else:
+                            await asyncio.sleep(0)
+                    if svc._writer_task is not None:
+                        await svc._writer_task
+                    observed.append(await svc.submit(batch))
+                    return svc, observed
+
+            svc, observed = run(main())
+            for res in observed:
+                pin = svc.epoch_log[res.epoch]
+                ref = quiesced_reference(
+                    lambda: make_summary("higgs", params=params),
+                    stream, pin["cursor"], pin["flushed"])
+                assert_same_values(res.values, ref.query(batch).values)
+
+        prop()
+
+
+# ---------------------------------------------------------------------------
+# QueryStats composition laws
+# ---------------------------------------------------------------------------
+
+class TestQueryStatsComposition:
+    def mk(self, **kw):
+        return dataclasses.replace(QueryStats(), **kw)
+
+    def test_merge_sums_everything_including_attribution(self):
+        a = self.mk(n_queries=3, boundary_searches=1, device_dispatches=4,
+                    buckets_probed=100, ob_probes=2, shard_mask=0b0011)
+        b = self.mk(n_queries=2, boundary_searches=2, device_dispatches=1,
+                    buckets_probed=50, ob_probes=1, shard_mask=0b0110)
+        a.merge(b)
+        assert a.n_queries == 5
+        assert a.boundary_searches == 3
+        assert a.device_dispatches == 5
+        assert a.buckets_probed == 150
+        assert a.ob_probes == 3
+        assert a.shard_mask == 0b0111 and a.shards_touched == 3
+
+    def test_absorb_keeps_parent_attribution(self):
+        a = self.mk(n_queries=7, buckets_probed=10)
+        a.absorb(self.mk(n_queries=99, buckets_probed=5, shard_mask=0b100))
+        assert a.n_queries == 7          # sub-executions don't re-count
+        assert a.buckets_probed == 15
+        assert a.shards_touched == 1
+
+    def test_shard_union_is_idempotent(self):
+        """Two sub-executions touching the same shard count it once —
+        the bug the old integer shards_touched counter had."""
+        a = self.mk(shard_mask=0b01)
+        a.absorb(self.mk(shard_mask=0b01))
+        a.absorb(self.mk(shard_mask=0b10))
+        assert a.shards_touched == 2
+
+    def test_composition_is_associative(self):
+        parts = [self.mk(n_queries=i + 1, buckets_probed=10 * i,
+                         device_dispatches=i, shard_mask=1 << (i % 3),
+                         coalesced=i)
+                 for i in range(4)]
+
+        def fold(order):
+            acc = dataclasses.replace(parts[order[0]])
+            for i in order[1:]:
+                acc.merge(dataclasses.replace(parts[i]))
+            return acc
+
+        x, y = fold([0, 1, 2, 3]), fold([3, 2, 1, 0])
+        assert x == y
+
+    def test_sharded_execution_reports_true_shard_union(self):
+        stream = make_stream(4096, 150, 2000, seed=14)
+        sh = make_summary("higgs-sharded", shards=4, params=PARAMS)
+        sh.insert(*stream)
+        sh.flush()
+        batch = probe_batch(stream, 5000)
+        res = sh.query(batch)
+        assert res.stats.n_queries == len(batch)
+        assert 1 <= res.stats.shards_touched <= 4
+        assert res.stats.shard_mask < (1 << 4)
+
+
+# ---------------------------------------------------------------------------
+# SummaryHandle facade + legacy deprecations
+# ---------------------------------------------------------------------------
+
+class TestSummaryHandle:
+    def test_make_summary_returns_handle_satisfying_protocol(self):
+        sk = make_summary("higgs", params=PARAMS)
+        assert type(sk.summary) is HiggsSketch
+        assert isinstance(sk, GraphSummary)
+        assert isinstance(sk, HiggsSketch)     # __class__ sees through
+        assert SummaryHandle is RawHandle
+
+    def test_handle_delegates_attributes_both_ways(self):
+        sk = make_summary("tcm")
+        sk.probe_counter = 0                   # setattr forwards
+        stream = make_stream(512, 64, 300, seed=15)
+        sk.insert(*stream)
+        assert sk.summary.probe_counter == sk.probe_counter
+
+    def test_handle_serve_session_round_trip(self):
+        stream = make_stream(2048, 100, 900, seed=16)
+
+        async def main():
+            sk = make_summary("higgs", params=PARAMS)
+            sk.insert(*stream)
+            sk.flush()
+            async with sk.serve(readers=1) as svc:
+                return await svc.submit(probe_batch(stream, 5000))
+
+        res = run(main())
+        assert res.epoch is not None and len(res.values) == 5
+
+    def test_handle_save_restore_round_trip(self, tmp_path):
+        from repro.api import restore_summary
+        stream = make_stream(2048, 100, 900, seed=17)
+        sk = make_summary("higgs", params=PARAMS)
+        sk.insert(*stream)
+        sk.flush()
+        sk.save(str(tmp_path), step=1)
+        got = restore_summary(str(tmp_path))
+        assert type(got) is RawHandle or isinstance(got, HiggsSketch)
+        batch = probe_batch(stream, 5000)
+        assert_same_values(sk.query(batch).values, got.query(batch).values)
+
+    def test_handle_snapshot_epoch_unwraps(self):
+        stream = make_stream(1024, 64, 500, seed=18)
+        sk = make_summary("higgs", params=PARAMS)
+        sk.insert(*stream)
+        ep = sk.snapshot_epoch()
+        assert isinstance(ep, ReadEpoch)
+        assert type(ep.replica) is HiggsSketch  # not a wrapped handle
+
+
+class TestLegacyDeprecations:
+    @pytest.fixture()
+    def fed(self):
+        stream = make_stream(1024, 64, 500, seed=19)
+        sk = make_summary("higgs", params=PARAMS)
+        sk.insert(*stream)
+        sk.flush()
+        return sk, stream
+
+    def test_edge_query_warns(self, fed):
+        sk, (src, dst, _, _) = fed
+        with pytest.warns(DeprecationWarning, match="edge_query"):
+            legacy = sk.edge_query(src[:4], dst[:4], 0, 1000)
+        batched = sk.query([EdgeQuery(src[:4], dst[:4], 0, 1000)])
+        np.testing.assert_array_equal(legacy, batched.values[0])
+
+    def test_vertex_query_warns(self, fed):
+        sk, (src, _, _, _) = fed
+        with pytest.warns(DeprecationWarning, match="vertex_query"):
+            sk.vertex_query(src[:4], 0, 1000, "out")
+
+    def test_path_query_warns(self, fed):
+        sk, (src, _, _, _) = fed
+        with pytest.warns(DeprecationWarning, match="path_query"):
+            sk.path_query(src[:3], 0, 1000)
+
+    def test_subgraph_query_warns(self, fed):
+        sk, (src, dst, _, _) = fed
+        with pytest.warns(DeprecationWarning, match="subgraph_query"):
+            sk.subgraph_query(np.stack([src[:3], dst[:3]], 1), 0, 1000)
+
+    def test_pointwise_baselines_warn_on_compound_shims(self):
+        bl = make_summary("tcm")
+        stream = make_stream(512, 64, 300, seed=20)
+        bl.insert(*stream)
+        with pytest.warns(DeprecationWarning, match="path_query"):
+            bl.path_query(stream[0][:3], 0, 1000)
