@@ -18,6 +18,7 @@ from __future__ import annotations
 import glob
 import json
 import os
+import time
 
 from benchmarks import common
 
@@ -101,9 +102,110 @@ def committed_floor(metric: str = "ingest/batched_speedup") -> float:
     return float(entry["value"])
 
 
+def fused_aggregate_speedup(n_edges: int = 20_000, seed: int = 0,
+                            repeat: int = 5) -> float:
+    """Measured speedup of the fused device-resident aggregation cascade
+    over the retired dataflow (``gather_block`` d2h -> numpy twin ->
+    ``append_batch`` h2d) on the *same* device-storage child pool.
+
+    Builds one device sketch, then re-aggregates its ready leaf block
+    into fresh parent pools both ways (the fused step does not donate
+    the child slabs, so the workload is reusable across repeats)."""
+    import jax
+    import numpy as np
+
+    from repro.core import cmatrix
+    from repro.core.cmatrix import EMPTY
+    from repro.core.higgs import HiggsSketch
+    from repro.core.params import HiggsParams
+    from repro.core.pool import _LevelPool
+    from repro.kernels.pipeline import DrainPipeline
+    from repro.stream.generator import lkml_like_stream
+
+    p = HiggsParams(d1=16, F1=19, insert_backend="pallas",
+                    batched_ingest=True, interpret=True)
+    sk = HiggsSketch(p)
+    sk.insert(*lkml_like_stream(n_edges=n_edges, seed=seed))
+    sk.flush()
+    assert sk._storage == "device"
+    theta = p.theta
+    child = sk.pools[0]
+    m = (child.n - child.base) // theta
+    assert m >= 2, "stream too small to form an aggregation block"
+    u0 = child.base // theta
+    ob = sk._gather_child_obs_stacked(1, u0, m)
+    pipe = DrainPipeline(p)
+
+    def run_fused():
+        parent = _LevelPool(p.d(2), p.b, storage="device")
+        t0 = time.perf_counter()
+        pipe.aggregate(child, parent, 1, u0, m, ob)
+        jax.block_until_ready(parent.device_slabs()["w"])
+        return time.perf_counter() - t0
+
+    def run_reference():
+        # the retired device dataflow, verbatim: bulk d2h child fetch,
+        # host coordinate recovery + placement twin, h2d parent append
+        parent = _LevelPool(p.d(2), p.b, storage="device")
+        t0 = time.perf_counter()
+        blk = child.gather_block(u0 * theta, m * theta)
+        d, per = child.d, theta * child.d * child.d * child.b
+        e_fs = np.asarray(blk["fp_s"]).reshape(m, per)
+        e_fd = np.asarray(blk["fp_d"]).reshape(m, per)
+        e_w = np.asarray(blk["w"]).reshape(m, per)
+        e_idx = np.asarray(blk["idx"]).reshape(m, per)
+        grid = np.broadcast_to(
+            np.arange(d, dtype=np.uint32)[:, None, None], (d, d, child.b))
+        e_row = np.broadcast_to(
+            np.broadcast_to(grid[None], (theta,) + grid.shape)
+            .reshape(1, per), (m, per))
+        e_col = np.broadcast_to(
+            np.broadcast_to(grid.transpose(1, 0, 2)[None],
+                            (theta,) + grid.shape).reshape(1, per),
+            (m, per))
+        e_valid = e_fs != EMPTY
+        f1s, base_s = cmatrix.host_recover_leaf_coords(
+            e_row, e_fs, e_idx, 1, p, "s")
+        f1d, base_d = cmatrix.host_recover_leaf_coords(
+            e_col, e_fd, e_idx, 1, p, "d")
+        w_all = e_w.astype(np.float32)
+        if ob is not None:
+            f1s = np.concatenate([f1s, ob["f1s"]], axis=1)
+            f1d = np.concatenate([f1d, ob["f1d"]], axis=1)
+            base_s = np.concatenate([base_s, ob["bs"]], axis=1)
+            base_d = np.concatenate([base_d, ob["bd"]], axis=1)
+            w_all = np.concatenate([w_all, ob["w"]], axis=1)
+            e_valid = np.concatenate([e_valid, ob["valid"]], axis=1)
+        fp_s_p, rows_p = cmatrix.host_coords_at_level(f1s, base_s, 2, p)
+        fp_d_p, cols_p = cmatrix.host_coords_at_level(f1d, base_d, 2, p)
+        rows_p = np.where(e_valid[..., None], rows_p, np.uint32(0))
+        cols_p = np.where(e_valid[..., None], cols_p, np.uint32(0))
+        r = p.r if p.use_mmb else 1
+        orders = cmatrix.host_round_orders(rows_p, cols_p, p.d(2), r)
+        state4, wmat, _ = cmatrix.aggregate_children_host(
+            fp_s_p, fp_d_p, rows_p, cols_p, w_all, e_valid, orders, p, 1)
+        s4 = np.asarray(state4)
+        parent.append_batch(
+            {"fp_s": s4[:, 0], "fp_d": s4[:, 1], "t": s4[:, 2],
+             "idx": s4[:, 3], "w": np.asarray(wmat)}, m)
+        jax.block_until_ready(parent.device_slabs()["w"])
+        return time.perf_counter() - t0
+
+    run_fused()                            # compile + warm both paths
+    run_reference()
+    fused_s = min(run_fused() for _ in range(repeat))
+    ref_s = min(run_reference() for _ in range(repeat))
+    speedup = ref_s / fused_s
+    common.emit("roofline/aggregate/fused_speedup", speedup,
+                f"m={m};ref_s={ref_s:.4f};fused_s={fused_s:.4f}")
+    common.record("aggregate/fused_speedup", speedup, "floor")
+    return speedup
+
+
 def smoke(n_edges: int = 30_000, seed: int = 0,
           tolerance: float = 0.25) -> None:
-    """CI gate: measured batched-ingest speedup vs the committed floor."""
+    """CI gate: measured batched-ingest speedup and fused-aggregation
+    speedup vs their committed floors."""
     from benchmarks import throughput
 
     floor = committed_floor()
@@ -117,8 +219,17 @@ def smoke(n_edges: int = 30_000, seed: int = 0,
         f"roofline smoke: batched ingest speedup {speedup:.2f}x fell "
         f"below the committed floor {floor}x (gate {gate:.2f}x with "
         f"{tolerance:.0%} noise tolerance)")
+    agg_floor = committed_floor("aggregate/fused_speedup")
+    agg = fused_aggregate_speedup(n_edges=max(n_edges // 2, 10_000),
+                                  seed=seed)
+    agg_gate = agg_floor * (1.0 - tolerance)
+    assert agg >= agg_gate, (
+        f"roofline smoke: fused aggregation speedup {agg:.2f}x fell "
+        f"below the committed floor {agg_floor}x (gate {agg_gate:.2f}x "
+        f"with {tolerance:.0%} noise tolerance)")
     print(f"roofline smoke OK: batched={speedup:.2f}x serial "
-          f"(committed floor {floor}x)")
+          f"(committed floor {floor}x); fused aggregate={agg:.2f}x "
+          f"retired dataflow (committed floor {agg_floor}x)")
 
 
 if __name__ == "__main__":

@@ -144,6 +144,24 @@ def verify_live_epoch_consistency(stream, batches) -> None:
           f"{len(svc.epoch_log)} epochs bit-identical to quiesced refs")
 
 
+def measure_epoch_plan_cache_hit_rate(sk, batches, pins: int = 10):
+    """Warm cross-epoch plan reuse: the fraction of plan lookups the
+    *first* answer of each of ``pins`` fresh epoch pins serves from the
+    adopted writer cache.  Fresh pins are the honest probe — a single
+    long-lived epoch amortizes its own early misses and would score
+    high even without adoption; here every pin starts a new replica
+    whose only warmth is what ``_pin_replica`` handed over."""
+    for b in batches:                       # memoize the writer's plans
+        sk.query(b)
+    hits = misses = 0
+    for i in range(pins):
+        ep = sk.snapshot_epoch()
+        st = ep.query(batches[i % len(batches)]).stats
+        hits += st.plan_cache_hits
+        misses += st.plan_cache_misses
+    return hits / max(hits + misses, 1)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
@@ -185,7 +203,10 @@ def main(argv=None) -> None:
                 f"coalesce_factor={factor:.1f}")
     common.emit("serving/p50_ms", float(np.percentile(lats, 50)) * 1e3)
     common.emit("serving/p99_ms", float(np.percentile(lats, 99)) * 1e3)
+    hit_rate = measure_epoch_plan_cache_hit_rate(sk, batches)
+    common.emit("serving/epoch_plan_cache_hit_rate", hit_rate)
 
+    record("serving/epoch_plan_cache_hit_rate", hit_rate, kind="floor")
     record("serving/coalesce_qps_ratio", ratio, kind="floor")
     record("serving/sequential_dispatches_per_round", seq_disp,
            kind="exact")
@@ -212,9 +233,15 @@ def main(argv=None) -> None:
             f"coalesced serving only {ratio:.2f}x the per-caller "
             f"sequential QPS at {args.callers} callers (floor {floor}x; "
             f"override with HIGGS_MIN_COALESCE_SPEEDUP)")
+        assert hit_rate >= 0.9, (
+            f"warm cross-epoch plan reuse broke: fresh pins answered "
+            f"with plan-cache hit rate {hit_rate:.2f} (floor 0.9) — "
+            f"epoch replicas are re-deriving plans the writer already "
+            f"memoized")
         print(f"serving smoke OK: {ratio:.2f}x QPS at {args.callers} "
               f"callers (floor {floor}x), dispatches/round "
-              f"{seq_disp} -> {coal_disp}")
+              f"{seq_disp} -> {coal_disp}, epoch plan-cache hit rate "
+              f"{hit_rate:.2f}")
 
     if args.json_out:
         write_json(args.json_out)

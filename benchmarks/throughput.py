@@ -201,6 +201,10 @@ def smoke(n_edges: int = 30_000, seed: int = 0, min_speedup: float = 1.5,
             f"serial (floor {min_speedup}x)")
         print(f"smoke OK: batched={speedup:.2f}x serial, "
               f"sketches identical")
+        # cost ratio of the fused device aggregation vs the retired
+        # gather->numpy->append dataflow; records its own floor metric
+        from benchmarks.roofline import fused_aggregate_speedup
+        fused_aggregate_speedup(n_edges=n_edges, seed=seed)
         if shards > 1:
             shard_smoke(n_edges=2 * n_edges, shards=shards)
     finally:

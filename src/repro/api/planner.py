@@ -109,6 +109,11 @@ class QueryPlanner:
         self.lifetime = QueryStats()       # accumulated across executions
         self._plan_cache: dict[tuple[int, int], tuple[dict, list]] = {}
         self._cache_version = -1
+        # True while the cache dict is shared with another planner
+        # (warm cross-epoch adoption); any mutation first rebinds to a
+        # private shallow copy — plan *values* are immutable and stay
+        # shared either way
+        self._cache_shared = False
 
     # ------------------------------------------------------------------
     # planning
@@ -125,27 +130,74 @@ class QueryPlanner:
         """
         version = self.sketch.structure_version
         if version != self._cache_version:
-            self._plan_cache.clear()
+            # rebind, never clear in place: the old dict may be shared
+            # with epoch replicas pinned at the previous version
+            self._plan_cache = {}
+            self._cache_shared = False
             self._cache_version = version
         key = (int(ts), int(te))
-        cached = self._plan_cache.pop(key, None)
+        cached = self._plan_cache.get(key)
+        self._own_cache()
         if cached is None:
             cached = self.sketch.boundary_search(ts, te)
             if len(self._plan_cache) >= self.MAX_CACHED_PLANS:
                 self._plan_cache.pop(next(iter(self._plan_cache)))
             stats.boundary_searches += 1
+            stats.plan_cache_misses += 1
         else:
             stats.plan_cache_hits += 1
+            self._plan_cache.pop(key)
         self._plan_cache[key] = cached
         return cached
+
+    def _own_cache(self) -> None:
+        """Copy-on-write un-share: a shallow dict copy (the plan values
+        themselves are never copied) before the first mutation after a
+        warm adoption."""
+        if self._cache_shared:
+            self._plan_cache = dict(self._plan_cache)
+            self._cache_shared = False
+
+    def adopt_cache(self, donor: "QueryPlanner", *,
+                    copy: bool = False) -> None:
+        """Warm cross-epoch plan reuse: adopt the donor's memoized plans.
+
+        Plans are pure functions of the tree structure, so a replica
+        whose frozen ``structure_version`` matches the version the
+        donor's cache was built against can adopt it wholesale — the
+        first answer on a fresh epoch pin then costs zero boundary
+        searches.  A stale donor cache (the writer mutated since it last
+        planned) or an empty one is ignored.
+
+        Default is zero-copy: both planners share the dict and flip to
+        copy-on-write, so neither side's later mutations (LRU reorder,
+        inserts, ``invalidate``) can reach the other.  ``copy=True``
+        (the deep-pin path) takes a private shallow copy up front.
+        """
+        if donor._cache_version != self.sketch.structure_version \
+                or not donor._plan_cache:
+            return
+        if copy:
+            self._plan_cache = dict(donor._plan_cache)
+            self._cache_shared = False
+        else:
+            donor._cache_shared = True
+            self._plan_cache = donor._plan_cache
+            self._cache_shared = True
+        self._cache_version = donor._cache_version
 
     def invalidate(self) -> None:
         """Drop every memoized plan and re-seed the cache epoch from the
         sketch's current ``structure_version``.  Called after a snapshot
         restore: the version counter alone cannot be trusted across
         restores (a different tree can legitimately carry the same
-        count), so restoring must invalidate explicitly."""
-        self._plan_cache.clear()
+        count), so restoring must invalidate explicitly.
+
+        Copy-on-invalidate: the cache is *rebound* to a fresh dict, not
+        cleared in place, so invalidating a pinned epoch replica can
+        never empty a cache it shares with the live writer."""
+        self._plan_cache = {}
+        self._cache_shared = False
         self._cache_version = self.sketch.structure_version
 
     # ------------------------------------------------------------------

@@ -142,6 +142,7 @@ class QueryStats:
     n_queries: int = 0
     boundary_searches: int = 0
     plan_cache_hits: int = 0
+    plan_cache_misses: int = 0  # ranges that paid a boundary search
     device_dispatches: int = 0
     buckets_probed: int = 0
     ob_probes: int = 0          # host-side overflow-block scans
@@ -150,8 +151,8 @@ class QueryStats:
 
     # counters that sum under BOTH compositions (everything except the
     # query attribution, the shard union and the coalescing fan-in)
-    _WORK = ("boundary_searches", "plan_cache_hits", "device_dispatches",
-             "buckets_probed", "ob_probes")
+    _WORK = ("boundary_searches", "plan_cache_hits", "plan_cache_misses",
+             "device_dispatches", "buckets_probed", "ob_probes")
 
     @property
     def shards_touched(self) -> int:

@@ -295,6 +295,25 @@ def host_round_orders(rows: np.ndarray, cols: np.ndarray, d: int,
     return np.argsort(bids, axis=-1, kind="stable").astype(np.int32)
 
 
+def round_orders(rows, cols, r: int):
+    """Device twin of :func:`host_round_orders` (the fused aggregation
+    step computes its orders on device so nothing crosses the d2h
+    barrier).  Instead of the host's single int64 ``row * d + col`` key
+    it runs a two-pass stable radix — stable argsort by the minor key
+    (col), then by the major key (row) — which yields the identical
+    permutation for every ``d`` without widening past uint32.
+    """
+    i_idx = np.repeat(np.arange(r), r)
+    j_idx = np.tile(np.arange(r), r)
+    # (..., n, r*r) -> (..., r*r, n)
+    rk = jnp.swapaxes(rows[..., i_idx], -1, -2).astype(jnp.uint32)
+    ck = jnp.swapaxes(cols[..., j_idx], -1, -2).astype(jnp.uint32)
+    o1 = jnp.argsort(ck, axis=-1, stable=True)
+    o2 = jnp.argsort(jnp.take_along_axis(rk, o1, axis=-1), axis=-1,
+                     stable=True)
+    return jnp.take_along_axis(o1, o2, axis=-1).astype(jnp.int32)
+
+
 def _premerge_host(w, valid, order, same):
     """NumPy twin of :func:`_premerge_pre` — float32 accumulation in the
     same (ascending sorted-position) order as the device segment_sum."""

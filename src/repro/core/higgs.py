@@ -321,6 +321,12 @@ class HiggsSketch(LegacyQueryMixin):
         that have not closed a leaf are invisible to queries on the live
         sketch too, so the replica answers exactly like the writer would
         if it were quiesced right now.
+
+        Either way the replica's planner adopts the writer's memoized
+        plan cache when it is warm at this ``structure_version`` (plans
+        are pure functions of the tree structure): zero-copy with
+        copy-on-write on the fast path, a dict copy on the deep path —
+        a fresh epoch pin is then O(1) to its first answer.
         """
         if self._storage == "host" and not self.segments.active:
             rep = object.__new__(type(self))
@@ -340,11 +346,13 @@ class HiggsSketch(LegacyQueryMixin):
             rep._version = self._version
             rep._probe_base = 0
             rep.planner = QueryPlanner(rep)
+            rep.planner.adopt_cache(self.planner)
             rep._chunk_pad = self._chunk_pad
         else:
             arrays, meta = self.state_dict()
             rep = type(self)(self.params)
             rep.load_state(arrays, meta)
+            rep.planner.adopt_cache(self.planner, copy=True)
         rep._pinned = True
         return rep
 
@@ -810,11 +818,19 @@ class HiggsSketch(LegacyQueryMixin):
                             t=np.zeros((k,), np.uint32))
 
     def _build_parents_batched(self, level: int, u0: int, m: int) -> None:
-        """Build all ``m`` ready parents at a level with one vmapped
-        ``aggregate_children_pre`` launch: child entries are gathered from
-        the host pool, leaf coordinates recovered and parent-level probe
-        chains + per-round sort orders computed in numpy, so the device
-        does pure sort-free placement."""
+        """Build all ``m`` ready parents at a level in one batched step.
+
+        Device pool storage dispatches to the fused device cascade
+        (:meth:`_build_parents_fused`): child blocks are reduced into
+        the donated parent slabs without any ``gather_block`` host
+        fetch.  Host storage stays the bit-reference: child entries are
+        gathered as plain views, leaf coordinates recovered and
+        parent-level probe chains + per-round sort orders computed in
+        numpy, and ``aggregate_children_host`` does sort-free placement
+        on the host."""
+        if self._storage == "device":
+            self._build_parents_fused(level, u0, m)
+            return
         p = self.params
         theta = p.theta
         pool = self.pools[level - 1]
@@ -867,24 +883,13 @@ class HiggsSketch(LegacyQueryMixin):
         r = p.r if p.use_mmb else 1
         orders = cmatrix.host_round_orders(rows_p, cols_p, p.d(plevel), r)
 
-        if self._backend == "vector":
-            mp = _pow2_pad(m, lo=1)                # bound jit shape variety
-            if mp != m:
-                def pad0(a):
-                    z = np.zeros((mp - m,) + a.shape[1:], a.dtype)
-                    return np.concatenate([a, z], axis=0)
-                fp_s_p, fp_d_p, rows_p, cols_p, w_all, e_valid, orders = (
-                    pad0(a) for a in (fp_s_p, fp_d_p, rows_p, cols_p,
-                                      w_all, e_valid, orders))
-            state4, wmat, spill = cmatrix.aggregate_children_pre(
-                jnp.asarray(fp_s_p), jnp.asarray(fp_d_p),
-                jnp.asarray(rows_p), jnp.asarray(cols_p),
-                jnp.asarray(w_all), jnp.asarray(e_valid),
-                jnp.asarray(orders), p, level)
-        else:
-            state4, wmat, spill = cmatrix.aggregate_children_host(
-                fp_s_p, fp_d_p, rows_p, cols_p, w_all, e_valid, orders,
-                p, level)
+        # one numpy twin for every host-storage backend: on CPU the
+        # placement twin outruns the XLA scatter path, and the former
+        # vector-backend aggregate_children_pre launch survives only
+        # inside the fused device step (kernels.aggregate_fused)
+        state4, wmat, spill = cmatrix.aggregate_children_host(
+            fp_s_p, fp_d_p, rows_p, cols_p, w_all, e_valid, orders,
+            p, level)
         s4 = np.asarray(state4)
         host = {"fp_s": s4[:, 0], "fp_d": s4[:, 1], "t": s4[:, 2],
                 "idx": s4[:, 3], "w": np.asarray(wmat)}
@@ -893,6 +898,40 @@ class HiggsSketch(LegacyQueryMixin):
         spill_h = np.asarray(spill)
         if not spill_h.any():
             return
+        for i in range(m):
+            idxs = np.nonzero(spill_h[i])[0]
+            if len(idxs):
+                self.ob.add(level + 1, u0 + i,
+                            f1s=f1s[i, idxs], f1d=f1d[i, idxs],
+                            bs=base_s[i, idxs], bd=base_d[i, idxs],
+                            w=w_all[i, idxs].astype(np.float64),
+                            t=np.zeros((len(idxs),), np.uint32))
+
+    def _build_parents_fused(self, level: int, u0: int, m: int) -> None:
+        """Device-resident aggregation cascade step (device pool storage).
+
+        One fused launch (`kernels/pipeline.py::_aggregate_step`) slices
+        the ready theta-child block out of the child pool's live slabs,
+        recovers leaf coordinates, computes round orders and places all
+        ``m`` parents directly into the *donated* parent slabs — the
+        child block never crosses to host (``_maybe_aggregate`` chains
+        one such launch per ready level per drain).  Only the small
+        spill mask is fetched; the canonical spill columns stay lazy
+        device arrays and materialize only when the mask is non-empty.
+        Bit-identical to the host-storage reference path above.
+        """
+        pool = self.pools[level - 1]
+        ob = self._gather_child_obs_stacked(level, u0, m)
+        if self._pipeline is None:
+            from repro.kernels.pipeline import DrainPipeline
+            self._pipeline = DrainPipeline(self.params)
+        # covered by the leaf-closing version bump earlier in this drain
+        spill_h, coords = self._pipeline.aggregate(  # higgslint: disable=R5
+            pool, self.pools[level], level, u0, m, ob)
+        if not spill_h.any():
+            return
+        f1s, f1d, base_s, base_d, w_all = (np.asarray(a)[:m]
+                                           for a in coords)
         for i in range(m):
             idxs = np.nonzero(spill_h[i])[0]
             if len(idxs):

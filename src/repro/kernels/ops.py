@@ -209,14 +209,26 @@ def xla_entry_points():
         cases = [TraceCase("L4_n1024", args, {"params": pv})]
         return cmatrix.insert_chunks_pre, ("params",), cases
 
-    def build_aggregate_children_vector():
-        pv = HiggsParams(insert_backend="vector")
-        m, N = 4, 256
-        args = (sds((m, N), u32), sds((m, N), u32), sds((m, N, r), u32),
-                sds((m, N, r), u32), sds((m, N), f32),
-                sds((m, N), jnp.bool_), sds((m, r * r, N), i32))
-        cases = [TraceCase("m4_N256_l1", args, {"params": pv, "level": 1})]
-        return cmatrix.aggregate_children_pre, ("params", "level"), cases
+    def build_aggregate_fused():
+        from repro.kernels.pipeline import _aggregate_step
+        # production shapes: theta-child block sliced from the level-1
+        # slabs (cap 64), parents scattered into the donated level-2
+        # slabs; the overflow columns are the only tensor h2d operands
+        level, mp, cap_c, cap_p, obp = 1, 2, 64, 16, 16
+        dp = p.d(level + 1)
+        pshape = (cap_p, dp, dp, b)
+        pslabs = (sds(pshape, u32), sds(pshape, u32), sds(pshape, f32),
+                  sds(pshape, u32), sds(pshape, u32))
+        cshape = (cap_c, d, d, b)
+        cslabs = (sds(cshape, u32), sds(cshape, u32), sds(cshape, f32),
+                  sds(cshape, u32))
+        ob_pack = sds((6, mp, obp), u32)
+        cases = [TraceCase("l1_m2_cap64",
+                           (*pslabs, *cslabs, ob_pack,
+                            sds((), i32), sds((), i32), sds((), i32)),
+                           {"mp": mp, "theta": p.theta, "level": level,
+                            "params": p})]
+        return _aggregate_step, ("mp", "theta", "level", "params"), cases
 
     interp = frozenset({"interpret"})
     return [
@@ -252,8 +264,16 @@ def xla_entry_points():
                    build_insert_chunks_vector,
                    host_args=tuple(range(10)), fetch_output=True,
                    expected_compile_keys=1),
-        EntryPoint("kernels.aggregate_children_vector",
-                   build_aggregate_children_vector,
-                   host_args=tuple(range(7)), fetch_output=True,
-                   expected_compile_keys=1),
+        # the fused aggregation cascade: parent slabs donated, child
+        # slabs device-resident; only the packed OB staging block (a
+        # host structure, six uint32 rows like ingest's raw staging)
+        # + three scalars cross h2d, and nothing returns but the small
+        # spill mask (fetched separately, outside this launch's output
+        # contract).  Replaces the retired
+        # kernels.aggregate_children_vector entry — the standalone
+        # vector launch survives only inside this step, and host-storage
+        # backends aggregate through the numpy twin with no XLA site.
+        EntryPoint("kernels.aggregate_fused", build_aggregate_fused,
+                   host_args=(9, 10, 11, 12),
+                   fetch_output=False, expected_compile_keys=1),
     ]

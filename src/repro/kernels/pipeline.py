@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core import cmatrix, hashing
 from repro.core.cmatrix import NodeState
+from repro.core.cmatrix import pow2_pad as _pow2_pad
 from repro.core.params import HiggsParams
 from repro.kernels import leaf_insert as _li
 
@@ -77,6 +78,87 @@ def _ingest_step(fp_s, fp_d, w, t, idx, stage, lengths, n0, nl, *,
         for slab, vals in zip((fp_s, fp_d, w, t, idx), nodes))
     spill_mask = jnp.where(valid, spill, 0)
     return slabs + (spill_mask,)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mp", "theta", "level", "params"),
+                   donate_argnums=(0, 1, 2, 3, 4))
+def _aggregate_step(pfp_s, pfp_d, pw, pt, pidx,
+                    c_fp_s, c_fp_d, c_w, c_idx,
+                    ob_pack, i0, n0, m, *,
+                    mp: int, theta: int, level: int, params):
+    """Fused aggregation step over donated parent-pool slabs.
+
+    pfp_s..pidx: (cap_p, dp, dp, b) parent-level slabs (donated, returned
+    updated).  c_*: (cap_c, d, d, b) child-level slabs, read-only.
+    ob_pack: (6, mp, ob_pad) uint32 host-staged overflow columns —
+    f1s/f1d/bs/bd, weight bits, validity — packed as ONE tensor like the
+    ingest staging block (the overflow store is a host structure;
+    zero-width when no child carries OB entries).
+    i0/n0/m: traced scalars (child-block physical offset, parent append
+    offset, live parent count) so per-drain positions never enter the
+    compile cache key; ``mp`` is the pow2-padded parent count bounding
+    jit shape variety exactly like the host batched path.
+
+    Bit-identical to :meth:`HiggsSketch._build_parents_batched`'s host
+    reference: the device ``recover_leaf_coords``/``coords_at_level``
+    twins are exact, invalid entries get the same zeroed coordinates,
+    and ``cmatrix.round_orders`` reproduces ``host_round_orders``'s
+    stable permutation, so ``aggregate_children_pre`` places the same
+    entries in the same rounds.  Garbage rows read for pad parents
+    (clamped takes past the ready block) scatter to ``cap_p`` and drop.
+    """
+    d, b = c_fp_s.shape[1], c_fp_s.shape[3]
+    per = theta * d * d * b
+    idx = i0 + jnp.arange(mp * theta, dtype=jnp.int32)
+    e_fs = jnp.take(c_fp_s, idx, axis=0).reshape(mp, per)
+    e_fd = jnp.take(c_fp_d, idx, axis=0).reshape(mp, per)
+    e_w = jnp.take(c_w, idx, axis=0).reshape(mp, per)
+    e_idx = jnp.take(c_idx, idx, axis=0).reshape(mp, per)
+    grid = jnp.arange(d, dtype=jnp.uint32)
+    shape5 = (mp, theta, d, d, b)
+    e_row = jnp.broadcast_to(grid[None, None, :, None, None],
+                             shape5).reshape(mp, per)
+    e_col = jnp.broadcast_to(grid[None, None, None, :, None],
+                             shape5).reshape(mp, per)
+    e_valid = e_fs != cmatrix.EMPTY
+
+    f1s, base_s = cmatrix.recover_leaf_coords(e_row, e_fs, e_idx, level,
+                                              params, "s")
+    f1d, base_d = cmatrix.recover_leaf_coords(e_col, e_fd, e_idx, level,
+                                              params, "d")
+    w_all = e_w
+    if ob_pack.shape[2]:
+        ob_w = jax.lax.bitcast_convert_type(ob_pack[4], jnp.float32)
+        f1s = jnp.concatenate([f1s, ob_pack[0]], axis=1)
+        f1d = jnp.concatenate([f1d, ob_pack[1]], axis=1)
+        base_s = jnp.concatenate([base_s, ob_pack[2]], axis=1)
+        base_d = jnp.concatenate([base_d, ob_pack[3]], axis=1)
+        w_all = jnp.concatenate([w_all, ob_w], axis=1)
+        e_valid = jnp.concatenate([e_valid, ob_pack[5] != 0], axis=1)
+
+    plevel = level + 1
+    fp_s_p, rows_p = cmatrix.coords_at_level(f1s, base_s, plevel, params)
+    fp_d_p, cols_p = cmatrix.coords_at_level(f1d, base_d, plevel, params)
+    # EMPTY entries recover garbage coordinates; zero them exactly like
+    # the host reference so placement ranks agree bit for bit
+    rows_p = jnp.where(e_valid[..., None], rows_p, jnp.uint32(0))
+    cols_p = jnp.where(e_valid[..., None], cols_p, jnp.uint32(0))
+    r = params.r if params.use_mmb else 1
+    orders = cmatrix.round_orders(rows_p, cols_p, r)
+    state4, wmat, spill = cmatrix.aggregate_children_pre(
+        fp_s_p, fp_d_p, rows_p, cols_p, w_all, e_valid, orders,
+        params, level)
+
+    li = jnp.arange(mp, dtype=jnp.int32)
+    tgt = jnp.where(li < m, n0 + li, jnp.int32(pfp_s.shape[0]))
+    slabs = tuple(
+        slab.at[tgt].set(vals, mode="drop")
+        for slab, vals in zip(
+            (pfp_s, pfp_d, pw, pt, pidx),
+            (state4[:, 0], state4[:, 1], wmat,
+             state4[:, 2], state4[:, 3])))
+    return slabs + (spill, f1s, f1d, base_s, base_d, w_all)
 
 
 class DrainPipeline:
@@ -138,3 +220,48 @@ class DrainPipeline:
         spill = np.asarray(out[5])[:nl].astype(bool)
         base_slot = pool.adopt_slabs(new_slabs, nl)
         return base_slot, spill, stage
+
+    def aggregate(self, child_pool, parent_pool, level: int, u0: int,
+                  m: int, ob):
+        """Build ``m`` ready parents at ``level`` in one fused launch
+        against the donated parent slabs — the device-resident twin of
+        the host batched aggregation (no ``gather_block`` fetch).
+
+        ``ob`` is the host-stacked overflow-column dict from
+        :meth:`HiggsSketch._gather_child_obs_stacked` (or ``None``),
+        packed here into one uint32 staging tensor — the only tensor
+        h2d operand besides three scalars.  Returns
+        ``(spill_mask (m, N) bool, coords)`` where ``coords`` are the
+        canonical spill columns ``(f1s, f1d, base_s, base_d, w)`` as
+        *lazy* device arrays: the caller materializes them only when the
+        spill mask is non-empty, so the steady-state cascade pays d2h
+        for nothing but the small mask.
+        """
+        p = self.params
+        theta = p.theta
+        mp = _pow2_pad(m, lo=1)            # bound jit shape variety
+        parent_pool.reserve(parent_pool.n + m)
+        pslabs = parent_pool.device_slabs()
+        cslabs = child_pool.device_slabs()
+        if ob is None:
+            ob_pack = np.zeros((6, mp, 0), np.uint32)
+        else:
+            obp = ob["w"].shape[1]
+            ob_pack = np.zeros((6, mp, obp), np.uint32)
+            for row, k in enumerate(("f1s", "f1d", "bs", "bd")):
+                ob_pack[row, :m] = ob[k]
+            ob_pack[4, :m] = ob["w"].view(np.uint32)
+            ob_pack[5, :m] = ob["valid"]
+        out = _aggregate_step(
+            pslabs["fp_s"], pslabs["fp_d"], pslabs["w"], pslabs["t"],
+            pslabs["idx"],
+            cslabs["fp_s"], cslabs["fp_d"], cslabs["w"], cslabs["idx"],
+            jnp.asarray(ob_pack),
+            np.int32(u0 * theta - child_pool.base),
+            np.int32(parent_pool.n), np.int32(m),
+            mp=mp, theta=theta, level=level, params=p)
+        parent_pool.adopt_slabs(dict(zip(NodeState._fields, out[:5])), m)
+        # the only mandatory d2h of the cascade level: the spill mask
+        # feeding the host overflow store
+        spill = np.asarray(out[5])[:m].astype(bool)
+        return spill, out[6:]

@@ -23,6 +23,17 @@ through the ``state_dict``/``load_state`` snapshot codec for any other
 :class:`~repro.api.protocol.GraphSummary` — slower, but the same
 immutability contract, which is what lets the service front baselines
 and the oracle unchanged.
+
+HIGGS pins additionally start *warm*: the replica's planner adopts the
+writer's memoized plan cache whenever the cache is current at the
+pinned ``structure_version`` (plans are pure functions of the tree
+structure).  Fast-path pins share the cache dict zero-copy behind
+copy-on-write; deep pins take a shallow dict copy.  Either way the
+plan values themselves are shared immutably, mutation on one side can
+never reach the other (``invalidate()`` on a replica rebinds, it does
+not clear), and a fresh epoch's first answer pays zero boundary
+searches — observable per execution as ``QueryStats.plan_cache_hits``
+vs ``plan_cache_misses``.
 """
 from __future__ import annotations
 

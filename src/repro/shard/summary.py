@@ -342,7 +342,13 @@ class ShardedHiggs(LegacyQueryMixin):
         """Read-only fleet replica at the current ``structure_version``:
         per-shard pins (zero-copy where each shard's storage allows it)
         plus a frozen routing-map copy.  Process-mode workers are synced
-        first, so the pin observes the exact current fleet state."""
+        first, so the pin observes the exact current fleet state.
+
+        Warm plan reuse composes per shard: each shard pin adopts its
+        writer shard's memoized plan cache (the fleet-level
+        :class:`ShardedQueryPlanner` is stateless), so a fresh fleet
+        epoch answers its first batch without any boundary searches
+        when the writers' caches are warm."""
         self._sync()
         rep = object.__new__(type(self))
         rep.params = self.params

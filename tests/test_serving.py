@@ -135,6 +135,98 @@ class TestReadEpoch:
 
 
 # ---------------------------------------------------------------------------
+# warm cross-epoch plan reuse
+# ---------------------------------------------------------------------------
+
+class TestWarmPlanReuse:
+    """Epoch pins adopt the writer's memoized plan cache (zero-copy +
+    copy-on-write on the fast path, shallow dict copy on the deep path):
+    a fresh epoch's first answer pays zero boundary searches, yet the
+    cache stays private — neither side's mutations reach the other."""
+
+    STORAGES = [
+        pytest.param("host", id="fast-pin"),      # zero-copy + COW
+        pytest.param("device", id="deep-pin"),    # shallow dict copy
+    ]
+
+    def warm_writer(self, storage, seed=30):
+        stream = make_stream(4096, 150, 2000, seed=seed)
+        sk = HiggsSketch(dataclasses.replace(PARAMS,
+                                             pool_storage=storage))
+        sk.insert(*stream)
+        sk.flush()
+        batch = probe_batch(stream, 5000)
+        sk.query(batch)                    # memoize the plans
+        return sk, stream, batch
+
+    @pytest.mark.parametrize("storage", STORAGES)
+    def test_warm_epoch_first_answer_is_all_hits(self, storage):
+        sk, _, batch = self.warm_writer(storage)
+        ep = sk.snapshot_epoch()
+        res = ep.query(batch)
+        assert res.stats.plan_cache_hits >= 1
+        assert res.stats.plan_cache_misses == 0
+        assert res.stats.boundary_searches == 0
+
+    @pytest.mark.parametrize("storage", STORAGES)
+    def test_warm_epoch_matches_cold_epoch(self, storage):
+        """Adopted plans change the work accounting, never the answers:
+        a warm pin and a cache-less pin of the same state agree
+        bit-for-bit on every query kind."""
+        sk, _, batch = self.warm_writer(storage)
+        warm = sk.snapshot_epoch()
+        cold = sk.snapshot_epoch()
+        cold.replica.planner.invalidate()   # simulate a cold start
+        cold_res = cold.query(batch)
+        # cold pays the boundary search the warm pin skipped (later
+        # same-key queries in the batch hit the plan it just built)
+        assert cold_res.stats.plan_cache_misses >= 1
+        assert cold_res.stats.boundary_searches >= 1
+        assert_same_values(warm.query(batch).values, cold_res.values)
+
+    @pytest.mark.parametrize("storage", STORAGES)
+    def test_replica_invalidate_leaves_writer_cache_intact(self, storage):
+        """Regression (copy-on-invalidate): invalidate() on a pinned
+        replica must rebind its own cache, not clear the shared dict."""
+        sk, _, batch = self.warm_writer(storage)
+        ep = sk.snapshot_epoch()
+        n_before = len(sk.planner._plan_cache)
+        assert n_before >= 1
+        ep.replica.planner.invalidate()
+        assert len(sk.planner._plan_cache) == n_before
+        # the writer still answers warm
+        res = sk.query(batch)
+        assert res.stats.plan_cache_misses == 0
+
+    def test_writer_mutation_does_not_disturb_pinned_cache(self):
+        """COW the other way: post-pin writer cache churn (new plans,
+        LRU eviction) is invisible to the shared-dict fast-path pin."""
+        sk, stream, batch = self.warm_writer("host")
+        ep = sk.snapshot_epoch()
+        # new query ranges force fresh plan inserts on the writer
+        for lo in range(0, 1000, 97):
+            sk.query([EdgeQuery(stream[0][:4], stream[1][:4],
+                                lo, lo + 53)])
+        res = ep.query(batch)
+        assert res.stats.plan_cache_hits >= 1
+        assert res.stats.plan_cache_misses == 0
+
+    def test_stale_cache_is_not_adopted(self):
+        """A pin taken after the writer's cache went stale (structure
+        mutated since the last query) starts cold instead of adopting
+        wrong-version plans."""
+        sk, stream, batch = self.warm_writer("host")
+        more = make_stream(2048, 150, 2000, seed=31)
+        sk.insert(*more)
+        sk.flush()                          # bumps structure_version
+        ep = sk.snapshot_epoch()
+        assert not ep.replica.planner._plan_cache   # nothing adopted
+        res = ep.query(batch)
+        assert res.stats.plan_cache_misses >= 1
+        assert res.stats.boundary_searches >= 1
+
+
+# ---------------------------------------------------------------------------
 # the service: coalescing + epoch consistency under interleaving
 # ---------------------------------------------------------------------------
 
